@@ -1,0 +1,65 @@
+"""Per-batch sampling wall-time on THIS host: the software side of the
+paper's latency story, plus our TPU-adapted fast paths.
+
+Compares: sum-tree PER (faithful baseline), cumsum PER (vector baseline),
+AMPER-fr (XLA), AMPER-fr (fused Pallas kernel path, interpret on CPU),
+AMPER-k (bisect).  On CPU the interpret-mode kernel is SLOW (it is a
+Python-level simulation) — its numbers validate correctness, not speed;
+the XLA AMPER path is the honest CPU speed proxy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import repro.core.quantize as qz
+from benchmarks.common import csv_row, time_fn
+from repro.core.amper import AmperConfig, AmperSampler
+from repro.core.per import CumsumPER, SumTreePER
+
+BATCH = 64
+
+
+def run(sizes=(10_000, 100_000, 1_000_000), verbose: bool = True):
+    rows = []
+    for n in sizes:
+        prio = jax.random.uniform(jax.random.key(0), (n,)) + 0.01
+        key = jax.random.key(1)
+
+        st = SumTreePER(n)
+        s1 = st.update(st.init(), jnp.arange(n), prio)
+        t_tree = time_fn(jax.jit(lambda s, k: st.sample(s, k, BATCH)), s1, key)
+        tu_tree = time_fn(jax.jit(st.update), s1,
+                          jnp.arange(BATCH, dtype=jnp.int32), prio[:BATCH])
+
+        cs = CumsumPER(n)
+        s2 = cs.update(cs.init(), jnp.arange(n), prio)
+        t_cum = time_fn(jax.jit(lambda s, k: cs.sample(s, k, BATCH)), s2, key)
+
+        cfg = AmperConfig(capacity=n, m=20, lam_fr=2.0, v_max=1.0,
+                          csp_capacity=max(int(n * 0.15), BATCH),
+                          knn_mode="bisect")
+        for variant in ("fr", "k"):
+            amp = AmperSampler(cfg, variant)
+            s3 = amp.update(amp.init(), jnp.arange(n), prio)
+            t = time_fn(jax.jit(lambda s, k: amp.sample(s, k, BATCH)), s3, key)
+            tu = time_fn(jax.jit(amp.update), s3,
+                         jnp.arange(BATCH, dtype=jnp.int32), prio[:BATCH])
+            rows.append((f"amper-{variant}/n{n}", t, tu))
+        rows.append((f"per-sumtree/n{n}", t_tree, tu_tree))
+        rows.append((f"per-cumsum/n{n}", t_cum, 0.0))
+        if verbose:
+            print(f"bench n={n}: sumtree sample={t_tree:.0f}us "
+                  f"update={tu_tree:.0f}us | cumsum={t_cum:.0f}us | "
+                  f"amper-fr={rows[-4][1]:.0f}us amper-k={rows[-3][1]:.0f}us")
+    return rows
+
+
+def main():
+    for name, t_sample, t_update in run():
+        print(csv_row(f"samplers/{name}", t_sample,
+                      f"update_us={t_update:.1f}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Fig. 4 reproduction: DQN per-operation latency breakdown vs ER size.
+
+Profiles the four DQN operations (store / ER-op=sample+update / train /
+action) on THIS machine (CPU; the paper used a GTX-1080) for uniform ER
+and PER across replay sizes.  The claims that transfer to any
+von-Neumann host: (1) PER's ER share grows with replay size; (2) ER ops
+dominate PER at >=1e5 entries while uniform stays flat.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_fn
+from repro.core.amper import UniformSampler
+from repro.core.per import SumTreePER
+from repro.core.replay_buffer import ReplayBuffer
+from repro.rl.dqn import mlp_apply, mlp_init
+
+OBS = 4
+
+
+def build(sampler_kind: str, size: int):
+    sampler = (SumTreePER(size) if sampler_kind == "per"
+               else UniformSampler(size))
+    rb = ReplayBuffer(size, sampler)
+    tr = {"obs": jnp.zeros(OBS), "action": jnp.int32(0),
+          "reward": jnp.float32(0), "next_obs": jnp.zeros(OBS),
+          "done": jnp.float32(0)}
+    state = rb.init(tr)
+    # pre-fill
+    add = jax.jit(rb.add)
+    prio = jax.random.uniform(jax.random.key(0), (size,)) + 0.1
+    state = state._replace(
+        sampler_state=sampler.update(state.sampler_state,
+                                     jnp.arange(size), prio),
+        size=jnp.int32(size))
+    return rb, state, tr
+
+
+def run(sizes=(1000, 10_000, 100_000), batch: int = 64, verbose=True):
+    params = mlp_init(jax.random.key(1), [OBS, 128, 128, 2])
+    obs_b = jnp.zeros((batch, OBS))
+    act_fn = jax.jit(lambda p, o: jnp.argmax(mlp_apply(p, o[None]), -1))
+    train_fn = jax.jit(lambda p, o: jax.grad(
+        lambda pp: jnp.mean(mlp_apply(pp, o) ** 2))(p))
+
+    rows = []
+    for kind in ("uniform", "per"):
+        for size in sizes:
+            rb, state, tr = build(kind, size)
+            t_store = time_fn(jax.jit(rb.add), state, tr)
+            t_sample = time_fn(
+                jax.jit(lambda s, k: rb.sample(s, k, batch)[0]),
+                state, jax.random.key(2))
+            t_update = time_fn(
+                jax.jit(rb.update_priorities), state,
+                jnp.arange(batch, dtype=jnp.int32),
+                jnp.ones(batch) * 0.5)
+            t_er = t_sample + t_update
+            t_train = time_fn(train_fn, params, obs_b)
+            t_action = time_fn(act_fn, params, obs_b[0])
+            total = t_store + t_er + t_train + t_action
+            row = {"sampler": kind, "size": size, "store_us": t_store,
+                   "er_us": t_er, "train_us": t_train,
+                   "action_us": t_action, "er_share": t_er / total}
+            rows.append(row)
+            if verbose:
+                print(f"fig4 {kind:8s} size={size:7d} store={t_store:7.1f}us "
+                      f"ER={t_er:8.1f}us train={t_train:7.1f}us "
+                      f"action={t_action:6.1f}us ER-share={row['er_share']:.0%}")
+    return rows
+
+
+def main():
+    rows = run()
+    per = {r["size"]: r for r in rows if r["sampler"] == "per"}
+    sizes = sorted(per)
+    # Fig 4 trend: ER share grows with replay size under PER
+    assert per[sizes[-1]]["er_us"] > per[sizes[0]]["er_us"], per
+    for r in rows:
+        print(csv_row(f"fig4/{r['sampler']}/size{r['size']}",
+                      r["er_us"], f"er_share={r['er_share']:.2f}"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Roofline table formatter: reads dry-run cell JSONs -> markdown/CSV.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.roofline results/cells/*.json
+  PYTHONPATH=src python -m benchmarks.roofline --md results/cells/*.json
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import sys
+
+
+def load(paths):
+    rows = []
+    for p in paths:
+        for pat in glob.glob(p):
+            with open(pat) as f:
+                rows.extend(json.load(f))
+    return rows
+
+
+def fmt_seconds(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.1f}ms"
+
+
+def table(rows, markdown=False):
+    hdr = ["arch", "shape", "mesh", "status", "t_comp", "t_mem", "t_coll",
+           "bottleneck", "useful", "roof_frac", "peakGB/dev"]
+    out = []
+    for r in sorted(rows, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        roof = r.get("roofline", {})
+        mem = r.get("memory", {})
+        if r["status"] == "ok":
+            out.append([
+                r["arch"], r["shape"], r["mesh"], "ok",
+                fmt_seconds(roof.get("t_compute_s")),
+                fmt_seconds(roof.get("t_memory_s")),
+                fmt_seconds(roof.get("t_collective_s")),
+                roof.get("bottleneck", "-"),
+                f"{roof['useful_flop_ratio']:.2f}" if roof.get("useful_flop_ratio") else "-",
+                f"{roof['roofline_fraction']:.3f}" if roof.get("roofline_fraction") else "-",
+                f"{mem.get('peak_bytes_per_dev', 0) / 1e9:.1f}",
+            ])
+        else:
+            out.append([r["arch"], r["shape"], r["mesh"], r["status"],
+                        "-", "-", "-", "-", "-", "-",
+                        r.get("reason", r.get("error", ""))[:40]])
+    if markdown:
+        lines = ["| " + " | ".join(hdr) + " |",
+                 "|" + "---|" * len(hdr)]
+        lines += ["| " + " | ".join(str(c) for c in row) + " |" for row in out]
+        return "\n".join(lines)
+    w = [max(len(str(r[i])) for r in [hdr] + out) for i in range(len(hdr))]
+    lines = ["  ".join(h.ljust(w[i]) for i, h in enumerate(hdr))]
+    lines += ["  ".join(str(c).ljust(w[i]) for i, c in enumerate(row))
+              for row in out]
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="+")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = load(args.paths)
+    print(table(rows, markdown=args.md))
+    ok = sum(r["status"] == "ok" for r in rows)
+    skip = sum(r["status"] == "skip" for r in rows)
+    err = sum(r["status"] == "error" for r in rows)
+    print(f"\n{ok} ok / {skip} skip / {err} error", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``python -m benchmarks.run [--quick]`` runs every benchmark and prints
+``name,us_per_call,derived`` CSV rows (plus human-readable logs).
+Roofline tables come from the dry-run artifacts: see benchmarks/roofline.py
+and EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller sizes / fewer seeds")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig4,fig7,fig9,table1,samplers")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    failures = []
+
+    def section(name, fn):
+        if only and name not in only:
+            return
+        print(f"\n=== {name} ===", flush=True)
+        try:
+            fn()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+
+    from benchmarks import (bench_samplers, fig4_latency, fig7_sampling_error,
+                            fig9_hw_latency, table1_learning)
+
+    section("fig4", lambda: fig4_latency.run(
+        sizes=(1000, 10_000) if args.quick else (1000, 10_000, 100_000)))
+    section("fig7", lambda: fig7_sampling_error.run(
+        n=5000 if args.quick else 10_000,
+        m_values=(2, 8) if args.quick else (2, 4, 8, 12)))
+    if not args.quick:
+        section("fig7d", fig7_sampling_error.run_sizes)
+    section("fig9", fig9_hw_latency.main)
+    section("table1", lambda: table1_learning.run(
+        steps=4000 if args.quick else 6000,
+        seeds=(0,) if args.quick else (0, 1)))
+    section("samplers", lambda: bench_samplers.run(
+        sizes=(10_000, 100_000) if args.quick else
+        (10_000, 100_000, 1_000_000)))
+
+    if failures:
+        print(f"\nFAILED sections: {failures}")
+        sys.exit(1)
+    print("\nall benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

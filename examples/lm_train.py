@@ -1,0 +1,28 @@
+"""End-to-end driver: LM training with AMPER-prioritized sequence replay.
+
+Thin wrapper over the production launcher (repro.launch.train) — train a
+reduced-config model for a few hundred steps with checkpointing; kill it
+mid-run and rerun to watch it resume exactly.
+
+Run:  PYTHONPATH=src python examples/lm_train.py --steps 200
+Full-size configs: drop --reduced (needs a real accelerator).
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="stablelm-1.6b")
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--sampler", default="amper-fr")
+ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_train")
+ap.add_argument("--full", action="store_true")
+args = ap.parse_args()
+
+argv = ["--arch", args.arch, "--steps", str(args.steps),
+        "--sampler", args.sampler, "--ckpt-dir", args.ckpt_dir,
+        "--batch", "8", "--seq-len", "128", "--ckpt-every", "50"]
+if not args.full:
+    argv.append("--reduced")
+sys.exit(train_main(argv))

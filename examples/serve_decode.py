@@ -1,0 +1,22 @@
+"""Serving example: batched prefill + decode for any zoo architecture.
+
+Exercises the real KV-cache serving path (dense / SWA / MLA-latent /
+SSM-state caches are chosen by the arch automatically).
+
+Run:  PYTHONPATH=src python examples/serve_decode.py --arch hymba-1.5b
+      PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-7b
+"""
+import argparse
+import sys
+
+from repro.launch.serve import main as serve_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="stablelm-1.6b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--gen", type=int, default=32)
+args = ap.parse_args()
+
+sys.exit(serve_main(["--arch", args.arch, "--reduced",
+                     "--batch", str(args.batch), "--prompt-len", "32",
+                     "--gen", str(args.gen)]))

@@ -1,0 +1,25 @@
+"""Core AMPER library: the paper's contribution as composable JAX modules."""
+from repro.core.amper import (
+    AmperConfig,
+    AmperSampler,
+    AmperState,
+    CspResult,
+    UniformSampler,
+    build_csp_fr,
+    build_csp_k,
+    make_sampler,
+    sample_from_csp,
+)
+from repro.core.per import CumsumPER, SumTreePER, importance_weights
+from repro.core.replay_buffer import ReplayBuffer, ReplayState
+
+# NOTE: fixed-point helpers live in repro.core.quantize; they are NOT
+# re-exported here because the function name `quantize` would shadow the
+# submodule attribute and break `import repro.core.quantize as qz`.
+
+__all__ = [
+    "AmperConfig", "AmperSampler", "AmperState", "CspResult", "UniformSampler",
+    "build_csp_fr", "build_csp_k", "make_sampler", "sample_from_csp",
+    "CumsumPER", "SumTreePER", "importance_weights",
+    "ReplayBuffer", "ReplayState",
+]

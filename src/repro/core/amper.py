@@ -1,0 +1,472 @@
+"""AMPER: associative-memory-based prioritized experience replay (Algorithm 1).
+
+Implements both paper variants as shape-static, jit/shard-friendly JAX:
+
+* :func:`build_csp_fr` -- AMPER-fr: one ternary prefix match per group
+  (Fig. 6(b2)/(c)), the faithful TPU mapping of the exact-match TCAM search.
+  ``exact_radius=True`` swaps the power-of-2 prefix approximation for an
+  exact ``|p - V| <= Delta`` range compare at identical vector cost — the
+  beyond-paper variant (a VPU, unlike a TCAM, range-compares for free).
+
+* :func:`build_csp_k` -- AMPER-k: the N_i nearest stored priorities per
+  group representative (Eqn. 1).  The oracle path selects via a full sort;
+  the fast path (`knn_mode="bisect"`) finds a per-group radius by bisecting
+  on the count returned by parallel range matches — the TPU-native
+  replacement for the paper's k sequential best-match TCAM sensings.
+
+The CSP is a fixed-capacity index buffer (stream compaction with
+``jnp.nonzero(size=...)``), so the whole sampler jits, vmaps and shards.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+import repro.core.quantize as qz
+
+
+class AmperConfig(NamedTuple):
+    """Hyper-parameters of Algorithm 1.
+
+    Attributes:
+      capacity: replay size n (number of priority rows).
+      m: number of groups (paper sweeps 2..20; Fig. 9 uses 20).
+      lam: scaling factor (lambda) for AMPER-k, Eqn. 1.
+      lam_fr: scaling factor (lambda') for AMPER-fr, Eqn. 4.
+      v_max: static maximum priority value V_max.
+      csp_capacity: static CSP buffer size (paper: CSP ratio * capacity;
+        Fig. 9 uses ratio 0.15).
+      frac_bits: fixed-point fraction bits for int32 quantization.
+      exact_radius: AMPER-fr only — use exact range compare instead of the
+        prefix-mask power-of-2 approximation (beyond-paper mode).
+      knn_mode: "sort" (oracle top-N_i), "bisect" (radius bisection) or
+        "hist" (shared cumulative histogram — 2 table passes).
+      fr_mode: "broadcast" ((m,N) compare, the faithful m-query search)
+        or "interval" (merged-interval stabbing, one table pass).
+    """
+
+    capacity: int
+    m: int = 20
+    lam: float = 0.05
+    lam_fr: float = 1.0
+    v_max: float = 1.0
+    csp_capacity: int = 1500
+    frac_bits: int = qz.DEFAULT_FRAC_BITS
+    exact_radius: bool = False
+    knn_mode: str = "sort"
+    fr_mode: str = "broadcast"
+
+
+class CspResult(NamedTuple):
+    """Stream-compacted candidate set of priorities."""
+
+    indices: jax.Array  # int32[csp_capacity], -1 padded
+    count: jax.Array    # int32 scalar, number of valid entries
+    selected: jax.Array  # bool[capacity] membership mask (for analysis/tests)
+
+
+def group_representatives(key: jax.Array, cfg: AmperConfig) -> jax.Array:
+    """Line 3 of Algorithm 1: V(g_i) ~ U[ V_max*i/m, V_max*(i+1)/m )."""
+    i = jnp.arange(cfg.m, dtype=jnp.float32)
+    lo = cfg.v_max * i / cfg.m
+    width = cfg.v_max / cfg.m
+    return lo + width * jax.random.uniform(key, (cfg.m,))
+
+
+def group_counts(pq: jax.Array, valid: jax.Array, cfg: AmperConfig) -> jax.Array:
+    """Line 5: C(g_i) — histogram of stored priorities over the m groups."""
+    width_q = (1 << cfg.frac_bits) // cfg.m
+    g = jnp.clip(pq // jnp.maximum(width_q, 1), 0, cfg.m - 1)
+    return jnp.zeros(cfg.m, jnp.int32).at[g].add(valid.astype(jnp.int32))
+
+
+def _compact(selected: jax.Array, csp_capacity: int,
+             key: jax.Array | None = None) -> CspResult:
+    """Stream compaction of a membership mask into a fixed-size index buffer.
+
+    If the match count exceeds the buffer capacity, plain ``nonzero``
+    keeps the lowest indices — a systematic bias toward whichever rows
+    the hardware scans first.  With ``key`` we start the scan at a random
+    rotation, so truncation drops a uniformly-random contiguous arc
+    instead of always the same rows (unbiased in expectation).
+    """
+    n = selected.shape[0]
+    if key is not None:
+        shift = jax.random.randint(key, (), 0, n)
+        rolled = jnp.roll(selected, -shift)
+        (idx,) = jnp.nonzero(rolled, size=csp_capacity, fill_value=-1)
+        idx = jnp.where(idx >= 0, (idx + shift) % n, -1)
+    else:
+        (idx,) = jnp.nonzero(selected, size=csp_capacity, fill_value=-1)
+    count = jnp.minimum(jnp.sum(selected.astype(jnp.int32)), csp_capacity)
+    return CspResult(indices=idx.astype(jnp.int32), count=count, selected=selected)
+
+
+def fr_queries(v_rep: jax.Array, cfg: AmperConfig) -> tuple[jax.Array, jax.Array]:
+    """AMPER-fr query generator (Fig. 6(b2)): (query, dont-care mask) per group.
+
+    Delta_i = round(lambda'/m * V(g_i))   [Eqn. 4, in quantized units]
+    mask_i  = bits at/below leading '1' of Delta_i.
+    """
+    vq = qz.quantize(v_rep, cfg.v_max, cfg.frac_bits)
+    delta_q = jnp.round((cfg.lam_fr / cfg.m) * vq.astype(jnp.float32)).astype(jnp.int32)
+    mask = qz.prefix_mask(delta_q)
+    return vq, mask
+
+
+def fr_radii(v_rep: jax.Array, cfg: AmperConfig) -> jax.Array:
+    """Exact (non-power-of-2) radii for the beyond-paper range-compare mode."""
+    vq = qz.quantize(v_rep, cfg.v_max, cfg.frac_bits)
+    return jnp.round((cfg.lam_fr / cfg.m) * vq.astype(jnp.float32)).astype(jnp.int32)
+
+
+def build_csp_fr(pq: jax.Array, valid: jax.Array, key: jax.Array,
+                 cfg: AmperConfig) -> CspResult:
+    """AMPER-fr CSP construction (Algorithm 1, lines 2-3, 9-12).
+
+    Args:
+      pq: int32[capacity] quantized priorities.
+      valid: bool[capacity] — slot currently holds a real experience with
+        non-zero priority.
+      key: PRNG key for the group representatives.
+    """
+    kv, kroll = jax.random.split(key)
+    v_rep = group_representatives(kv, cfg)
+    if cfg.fr_mode == "interval":
+        lo, hi = fr_intervals(v_rep, cfg)
+        selected = _interval_membership(pq, lo, hi) & valid
+        return _compact(selected, cfg.csp_capacity, kroll)
+    if cfg.fr_mode == "window":
+        lo, hi = fr_intervals(v_rep, cfg)
+        selected = _window_membership(pq, lo, hi, cfg) & valid
+        return _compact(selected, cfg.csp_capacity, kroll)
+    if cfg.exact_radius:
+        vq = qz.quantize(v_rep, cfg.v_max, cfg.frac_bits)
+        radius = fr_radii(v_rep, cfg)
+        match = jnp.abs(pq[None, :] - vq[:, None]) <= radius[:, None]
+    else:
+        vq, mask = fr_queries(v_rep, cfg)
+        match = qz.ternary_match(pq[None, :], vq[:, None], mask[:, None])
+    selected = jnp.any(match, axis=0) & valid
+    return _compact(selected, cfg.csp_capacity, kroll)
+
+
+def knn_sizes(v_rep: jax.Array, counts: jax.Array, cfg: AmperConfig) -> jax.Array:
+    """Eqn. 1: N_i = round(lambda * V(g_i) * C(g_i))."""
+    return jnp.round(cfg.lam * v_rep * counts.astype(jnp.float32)).astype(jnp.int32)
+
+
+def _knn_select_sort(pq: jax.Array, valid: jax.Array, vq: jax.Array,
+                     n_i: jax.Array) -> jax.Array:
+    """Oracle kNN: per group, mark the N_i nearest valid priorities.
+
+    Returns bool[m, capacity].  Ties at the radius boundary are broken by
+    index (stable sort), matching a deterministic hardware scan order.
+    """
+    big = jnp.int32(2**30)
+    dist = jnp.abs(pq[None, :] - vq[:, None])
+    dist = jnp.where(valid[None, :], dist, big)
+    rank = jnp.argsort(jnp.argsort(dist, axis=1), axis=1)  # rank of each slot
+    return (rank < n_i[:, None]) & valid[None, :]
+
+
+def _knn_select_bisect(pq: jax.Array, valid: jax.Array, vq: jax.Array,
+                       n_i: jax.Array, frac_bits: int) -> jax.Array:
+    """TPU-native kNN: bisect on radius until count(|p-V|<=r) >= N_i.
+
+    log2(range) parallel count passes replace the paper's N_i sequential
+    best-match sensings.  Over-selection at the final radius is trimmed by
+    index order so |subset| == N_i exactly.
+    """
+    big = jnp.int32(2**30)
+    dist = jnp.where(valid[None, :], jnp.abs(pq[None, :] - vq[:, None]), big)
+
+    def body(carry, _):
+        lo, hi = carry  # int32[m] bounds on radius
+        mid = (lo + hi) // 2
+        cnt = jnp.sum(dist <= mid[:, None], axis=1)
+        lo = jnp.where(cnt < n_i, mid + 1, lo)
+        hi = jnp.where(cnt >= n_i, mid, hi)
+        return (lo, hi), None
+
+    lo = jnp.zeros_like(n_i)
+    hi = jnp.full_like(n_i, 1 << frac_bits)
+    (radius, _), _ = jax.lax.scan(body, (lo, hi), None, length=frac_bits + 1)
+    within = dist <= radius[:, None]
+    # Trim over-selection (ties at the radius): keep the first N_i by index.
+    order = jnp.cumsum(within.astype(jnp.int32), axis=1)
+    return within & (order <= n_i[:, None])
+
+
+def fr_intervals(v_rep: jax.Array, cfg: AmperConfig) -> tuple[jax.Array, jax.Array]:
+    """The m accepted ranges [lo_i, hi_i] of AMPER-fr (prefix or exact)."""
+    vq = qz.quantize(v_rep, cfg.v_max, cfg.frac_bits)
+    if cfg.exact_radius:
+        r = fr_radii(v_rep, cfg)
+        return vq - r, vq + r
+    _, mask = fr_queries(v_rep, cfg)
+    return qz.prefix_range(vq, mask)
+
+
+def _interval_membership(pq: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """Is pq inside the union of [lo_i, hi_i]?  One searchsorted pass.
+
+    Interval-stabbing formulation: sort the 2m boundary events, prefix-sum
+    the open/close weights to get coverage depth at each boundary, then a
+    single binary search per row reads off whether its depth is > 0.
+    O(N log m) compares and exactly one pass over the table — versus the
+    (m, N) broadcast compare that materialises m bitmasks.  This is the
+    roofline-floor version of the TCAM search for the selection-only
+    (AMPER-fr) case.
+    """
+    m = lo.shape[0]
+    # events: +1 at lo, -1 at hi+1
+    pts = jnp.concatenate([lo, hi + 1])
+    wts = jnp.concatenate([jnp.ones(m, jnp.int32), -jnp.ones(m, jnp.int32)])
+    order = jnp.argsort(pts)
+    pts, wts = pts[order], wts[order]
+    depth = jnp.cumsum(wts)  # coverage depth AFTER each event point
+    idx = jnp.searchsorted(pts, pq, side="right") - 1
+    return jnp.where(idx >= 0, depth[jnp.clip(idx, 0, 2 * m - 1)] > 0, False)
+
+
+def build_csp_fr_interval(pq: jax.Array, valid: jax.Array, key: jax.Array,
+                          cfg: AmperConfig) -> CspResult:
+    """AMPER-fr via interval stabbing (bit-identical selection to
+    :func:`build_csp_fr`, one table pass instead of m)."""
+    kv, kroll = jax.random.split(key)
+    v_rep = group_representatives(kv, cfg)
+    lo, hi = fr_intervals(v_rep, cfg)
+    selected = _interval_membership(pq, lo, hi) & valid
+    return _compact(selected, cfg.csp_capacity, kroll)
+
+
+def _window_membership(pq: jax.Array, lo: jax.Array, hi: jax.Array,
+                       cfg: AmperConfig) -> jax.Array:
+    """Neighbour-window membership: O(ceil(2*lam')) ops/row, no (m,N) temps.
+
+    Group i's accepted block has width <= 2*Delta_i <= 2*lam'*group_width
+    and contains V(g_i) which lies IN group i, so a row in value-group g
+    can only be matched by groups within ceil(2*lam') of g.  Gather those
+    2c+1 candidate bounds per row and compare — the (m, N) broadcast the
+    faithful search materialises never exists.
+    """
+    m = cfg.m
+    width_q = max((1 << cfg.frac_bits) // m, 1)
+    g = jnp.clip(pq // width_q, 0, m - 1)
+    c = int(-(-2 * cfg.lam_fr // 1))  # ceil(2*lam')
+    sel = jnp.zeros(pq.shape, jnp.bool_)
+    for j in range(-c, c + 1):
+        gi = jnp.clip(g + j, 0, m - 1)
+        sel = sel | ((pq >= lo[gi]) & (pq <= hi[gi]))
+    return sel
+
+
+def build_csp_fr_kernel(pq: jax.Array, valid: jax.Array, key: jax.Array,
+                        cfg: AmperConfig) -> CspResult:
+    """AMPER-fr via the fused Pallas multi-query kernel (one HBM pass).
+
+    Bit-identical to :func:`build_csp_fr`: a prefix query with don't-care
+    mask M is exactly the inclusive range [q & ~M, (q & ~M) | M].
+    """
+    from repro.kernels import ops as kops  # deferred: kernels are optional
+
+    kv, kroll = jax.random.split(key)
+    v_rep = group_representatives(kv, cfg)
+    if cfg.exact_radius:
+        vq = qz.quantize(v_rep, cfg.v_max, cfg.frac_bits)
+        radius = fr_radii(v_rep, cfg)
+        lo, hi = vq - radius, vq + radius
+    else:
+        vq, mask = fr_queries(v_rep, cfg)
+        lo, hi = qz.prefix_range(vq, mask)
+    sel, _counts = kops.multi_query_match(pq, valid, lo, hi)
+    return _compact(sel, cfg.csp_capacity, kroll)
+
+
+def _knn_select_hist(pq: jax.Array, valid: jax.Array, vq: jax.Array,
+                     n_i: jax.Array, frac_bits: int,
+                     hist_bins: int = 4096) -> jax.Array:
+    """Histogram kNN: ~2 passes over the table instead of ~26.
+
+    One shared cumulative VALUE histogram F (single pass over pq) turns
+    count(|p - V| <= r) into F(V+r) - F(V-r): the per-group radius
+    bisection then runs on 4 KiB of histogram instead of re-scanning the
+    table per probe.  One final match pass selects; over-selection from
+    bin granularity is trimmed by scan order so |subset| == N_i exactly.
+    """
+    top = 1 << frac_bits
+    shift = frac_bits - (hist_bins.bit_length() - 1)
+    bucket = jnp.clip(pq >> shift, 0, hist_bins - 1)
+    hist = jnp.zeros(hist_bins, jnp.int32).at[bucket].add(valid.astype(jnp.int32))
+    cum = jnp.cumsum(hist)  # F(b) = count of pq with bucket <= b
+
+    def count_within(radius):
+        # LOWER bound: count only buckets fully inside [V-r, V+r], so the
+        # bisected radius can only over-select; the exact trim below then
+        # cuts back to N_i precisely.
+        binsz = 1 << shift
+        lo_b = jnp.clip((vq - radius + binsz - 1) >> shift, 0, hist_bins)
+        hi_b = jnp.clip(((vq + radius + 1) >> shift) - 1, -1, hist_bins - 1)
+        below = jnp.where(lo_b > 0, cum[jnp.clip(lo_b - 1, 0, hist_bins - 1)], 0)
+        inside = cum[jnp.clip(hi_b, 0, hist_bins - 1)] - below
+        return jnp.where(hi_b >= lo_b, inside, 0)
+
+    def body(carry, _):
+        lo, hi = carry
+        mid = (lo + hi) // 2
+        cnt = count_within(mid)
+        lo = jnp.where(cnt < n_i, mid + 1, lo)
+        hi = jnp.where(cnt >= n_i, mid, hi)
+        return (lo, hi), None
+
+    lo = jnp.zeros_like(n_i)
+    hi = jnp.full_like(n_i, top)
+    (radius, _), _ = jax.lax.scan(body, (lo, hi), None, length=frac_bits + 1)
+    big = jnp.int32(2**30)
+    dist = jnp.where(valid[None, :], jnp.abs(pq[None, :] - vq[:, None]), big)
+    within = dist <= radius[:, None]
+    order = jnp.cumsum(within.astype(jnp.int32), axis=1)
+    return within & (order <= n_i[:, None])
+
+
+def build_csp_k(pq: jax.Array, valid: jax.Array, key: jax.Array,
+                cfg: AmperConfig) -> CspResult:
+    """AMPER-k CSP construction (Algorithm 1, lines 2-8)."""
+    kv, kroll = jax.random.split(key)
+    v_rep = group_representatives(kv, cfg)
+    vq = qz.quantize(v_rep, cfg.v_max, cfg.frac_bits)
+    counts = group_counts(pq, valid, cfg)
+    n_i = knn_sizes(v_rep, counts, cfg)
+    if cfg.knn_mode == "bisect":
+        sel = _knn_select_bisect(pq, valid, vq, n_i, cfg.frac_bits)
+    elif cfg.knn_mode == "hist":
+        sel = _knn_select_hist(pq, valid, vq, n_i, cfg.frac_bits)
+    else:
+        sel = _knn_select_sort(pq, valid, vq, n_i)
+    selected = jnp.any(sel, axis=0) & valid
+    return _compact(selected, cfg.csp_capacity, kroll)
+
+
+def sample_from_csp(csp: CspResult, key: jax.Array, batch: int,
+                    fallback_size: jax.Array) -> jax.Array:
+    """Algorithm 1 lines 14-17: uniform sample of the CSP.
+
+    If the CSP came up empty (possible early in training when all
+    priorities sit in one group and the representative misses), fall back
+    to uniform over the live buffer — the same degenerate behaviour a
+    hardware CSP buffer underflow would trigger.
+    """
+    u = jax.random.randint(key, (batch,), 0, jnp.maximum(csp.count, 1))
+    picked = csp.indices[u]
+    fallback = jax.random.randint(key, (batch,), 0, jnp.maximum(fallback_size, 1))
+    return jnp.where(csp.count > 0, picked, fallback).astype(jnp.int32)
+
+
+class AmperState(NamedTuple):
+    """Sampler state: quantized priorities + validity mask."""
+
+    pq: jax.Array     # int32[capacity]
+    valid: jax.Array  # bool[capacity]
+
+
+class AmperSampler:
+    """Unified AMPER sampler ('fr' or 'k' variant) with the PER-like API.
+
+    Priorities passed to :meth:`update` are the already-exponentiated
+    p = |td|^alpha values, exactly as for the PER baselines, so samplers
+    are drop-in interchangeable in the replay buffer and the data pipeline.
+    """
+
+    def __init__(self, cfg: AmperConfig, variant: str = "fr"):
+        if variant not in ("fr", "k"):
+            raise ValueError(f"unknown AMPER variant: {variant!r}")
+        self.cfg = cfg
+        self.variant = variant
+
+    def init(self) -> AmperState:
+        return AmperState(
+            pq=jnp.zeros(self.cfg.capacity, jnp.int32),
+            valid=jnp.zeros(self.cfg.capacity, jnp.bool_),
+        )
+
+    def total(self, state: AmperState) -> jax.Array:
+        return jnp.sum(
+            qz.dequantize(state.pq, self.cfg.v_max, self.cfg.frac_bits)
+            * state.valid
+        )
+
+    def priorities(self, state: AmperState) -> jax.Array:
+        return qz.dequantize(state.pq, self.cfg.v_max, self.cfg.frac_bits) * state.valid
+
+    def update(self, state: AmperState, idx: jax.Array, priority: jax.Array) -> AmperState:
+        """Priority write — a single TCAM row write in hardware (Sec. 3.4.3)."""
+        pq = state.pq.at[idx].set(qz.quantize(priority, self.cfg.v_max, self.cfg.frac_bits))
+        valid = state.valid.at[idx].set(priority > 0)
+        return AmperState(pq=pq, valid=valid)
+
+    def build_csp(self, state: AmperState, key: jax.Array) -> CspResult:
+        fn = build_csp_fr if self.variant == "fr" else build_csp_k
+        return fn(state.pq, state.valid, key, self.cfg)
+
+    def sample(self, state: AmperState, key: jax.Array, batch: int,
+               stratified: bool = True) -> jax.Array:
+        del stratified  # CSP sampling is uniform by construction
+        kcsp, kpick = jax.random.split(key)
+        csp = self.build_csp(state, kcsp)
+        live = jnp.sum(state.valid.astype(jnp.int32))
+        return sample_from_csp(csp, kpick, batch, live)
+
+
+def make_sampler(kind: str, capacity: int, **kw):
+    """Factory: 'uniform' | 'per-sumtree' | 'per-cumsum' | 'amper-fr' | 'amper-k'."""
+    from repro.core import per as per_mod  # local import to avoid cycles
+
+    if kind == "per-sumtree":
+        return per_mod.SumTreePER(capacity)
+    if kind == "per-cumsum":
+        return per_mod.CumsumPER(capacity)
+    if kind in ("amper-fr", "amper-k"):
+        cfg = AmperConfig(capacity=capacity, **kw)
+        return AmperSampler(cfg, variant=kind.split("-")[1])
+    if kind == "uniform":
+        return UniformSampler(capacity)
+    raise ValueError(f"unknown sampler kind: {kind!r}")
+
+
+class UniformState(NamedTuple):
+    priorities: jax.Array  # kept so the API is uniform; ignored for sampling
+    valid: jax.Array
+
+
+class UniformSampler:
+    """Uniform ER — the paper's weak baseline."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+
+    def init(self) -> UniformState:
+        return UniformState(
+            priorities=jnp.zeros(self.capacity, jnp.float32),
+            valid=jnp.zeros(self.capacity, jnp.bool_),
+        )
+
+    def total(self, state: UniformState) -> jax.Array:
+        return jnp.sum(state.priorities * state.valid)
+
+    def priorities(self, state: UniformState) -> jax.Array:
+        return state.priorities * state.valid
+
+    def update(self, state: UniformState, idx, priority) -> UniformState:
+        return UniformState(
+            priorities=state.priorities.at[idx].set(priority),
+            valid=state.valid.at[idx].set(priority > 0),
+        )
+
+    def sample(self, state: UniformState, key, batch: int, stratified: bool = True):
+        del stratified
+        live = jnp.maximum(jnp.sum(state.valid.astype(jnp.int32)), 1)
+        return jax.random.randint(key, (batch,), 0, live).astype(jnp.int32)

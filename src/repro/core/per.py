@@ -1,0 +1,156 @@
+"""Prioritized Experience Replay baselines.
+
+Two implementations of the sum-based priority sampling the paper
+describes in Sec. 2.1 / Fig. 2:
+
+* :class:`SumTreePER` -- the faithful array-backed sum tree with O(log n)
+  stochastic descent per sample and O(log n) scatter-add per update.  This
+  is the baseline whose tree-traversal cost the paper attacks; we keep it
+  bit-faithful (fori_loop descent, per-level delta propagation) so the
+  Fig. 4-style latency breakdown can be reproduced.
+
+* :class:`CumsumPER` -- the TPU/vector-idiomatic equivalent: prefix-sum +
+  vectorised ``searchsorted``.  Mathematically identical sampling law,
+  O(n) fully-parallel work, no irregular access.  This is what priority
+  sampling *should* look like on a vector machine and serves as the
+  "strong baseline" in benchmarks.
+
+Both sample with the PER law P(i) = p_i / sum_k p_k where the stored
+p_i are already exponentiated (p = |td|^alpha), and both support
+stratified sampling (one uniform per batch segment, as in Schaul et al.)
+and importance-sampling weights w_i = (N * P(i))^-beta / max_j w_j.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+class SumTreeState(NamedTuple):
+    """Array-backed sum tree. tree[1] is the root; leaves at [leaf0, leaf0+n)."""
+
+    tree: jax.Array  # float32[2 * n_pow2]
+    n_leaves: int
+
+
+class SumTreePER:
+    """Faithful sum-tree PER (Fig. 2(c))."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.n_pow2 = _next_pow2(capacity)
+        self.depth = self.n_pow2.bit_length() - 1  # levels below the root
+
+    def init(self) -> SumTreeState:
+        return SumTreeState(
+            tree=jnp.zeros(2 * self.n_pow2, jnp.float32), n_leaves=self.capacity
+        )
+
+    def total(self, state: SumTreeState) -> jax.Array:
+        return state.tree[1]
+
+    def priorities(self, state: SumTreeState) -> jax.Array:
+        leaf0 = self.n_pow2
+        return jax.lax.dynamic_slice(state.tree, (leaf0,), (self.capacity,))
+
+    def update(self, state: SumTreeState, idx: jax.Array, priority: jax.Array) -> SumTreeState:
+        """Set priorities at ``idx`` (int32[b]) to ``priority`` (float32[b]).
+
+        Propagates per-level deltas with scatter-add, which is exactly the
+        leaf-to-root walk of the textbook implementation but batched; shared
+        ancestors accumulate both deltas, preserving correctness.
+        """
+        tree = state.tree
+        leaf = idx + self.n_pow2
+        old = tree[leaf]
+        delta = priority.astype(jnp.float32) - old
+        # Duplicate indices within one batch would double-apply deltas; PER
+        # updates are on distinct sampled indices, but we guard anyway by
+        # keeping only the last occurrence of each leaf.
+        order = jnp.arange(idx.shape[0])
+        last = jnp.zeros(self.capacity, jnp.int32).at[idx].max(order + 1)
+        keep = last[idx] == order + 1
+        delta = jnp.where(keep, delta, 0.0)
+        node = leaf
+        for _ in range(self.depth + 1):  # leaf level up to and including root
+            tree = tree.at[node].add(delta)
+            node = node // 2
+        return SumTreeState(tree=tree, n_leaves=state.n_leaves)
+
+    def sample(self, state: SumTreeState, key: jax.Array, batch: int,
+               stratified: bool = True) -> jax.Array:
+        """Draw ``batch`` leaf indices by stochastic descent (Fig. 2(c))."""
+        total = jnp.maximum(state.tree[1], 1e-12)
+        u = jax.random.uniform(key, (batch,))
+        if stratified:
+            seg = total / batch
+            target = (jnp.arange(batch) + u) * seg
+        else:
+            target = u * total
+
+        def descend(carry, _):
+            node, rem = carry
+            left = 2 * node
+            lsum = state.tree[left]
+            go_left = rem < lsum
+            node = jnp.where(go_left, left, left + 1)
+            rem = jnp.where(go_left, rem, rem - lsum)
+            return (node, rem), None
+
+        (node, _), _ = jax.lax.scan(
+            descend, (jnp.ones((batch,), jnp.int32), target), None, length=self.depth
+        )
+        return jnp.clip(node - self.n_pow2, 0, self.capacity - 1)
+
+
+class CumsumState(NamedTuple):
+    priorities: jax.Array  # float32[capacity]
+
+
+class CumsumPER:
+    """Vector-machine PER: cumulative sum + searchsorted (same sampling law)."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+
+    def init(self) -> CumsumState:
+        return CumsumState(priorities=jnp.zeros(self.capacity, jnp.float32))
+
+    def total(self, state: CumsumState) -> jax.Array:
+        return jnp.sum(state.priorities)
+
+    def priorities(self, state: CumsumState) -> jax.Array:
+        return state.priorities
+
+    def update(self, state: CumsumState, idx: jax.Array, priority: jax.Array) -> CumsumState:
+        return CumsumState(priorities=state.priorities.at[idx].set(priority))
+
+    def sample(self, state: CumsumState, key: jax.Array, batch: int,
+               stratified: bool = True) -> jax.Array:
+        c = jnp.cumsum(state.priorities)
+        total = jnp.maximum(c[-1], 1e-12)
+        u = jax.random.uniform(key, (batch,))
+        if stratified:
+            target = (jnp.arange(batch) + u) * (total / batch)
+        else:
+            target = u * total
+        idx = jnp.searchsorted(c, target, side="right")
+        return jnp.clip(idx, 0, self.capacity - 1).astype(jnp.int32)
+
+
+def importance_weights(priorities: jax.Array, idx: jax.Array, size: jax.Array,
+                       beta: float) -> jax.Array:
+    """PER importance-sampling weights, max-normalised (Schaul et al. Eq. 2)."""
+    total = jnp.maximum(jnp.sum(priorities), 1e-12)
+    p_sel = jnp.maximum(priorities[idx], 1e-12) / total
+    w = (size.astype(jnp.float32) * p_sel) ** (-beta)
+    return w / jnp.maximum(jnp.max(w), 1e-12)

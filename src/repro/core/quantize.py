@@ -1,0 +1,84 @@
+"""Fixed-point priority quantization and TCAM prefix-mask generation.
+
+The paper stores each priority as an INT-32 TCAM row (Sec. 4.2: "Each
+priority entry is represented with INT-32 bits"). We mirror that exactly:
+priorities in ``[0, v_max]`` are mapped to non-negative int32 fixed point
+with ``frac_bits`` fractional bits relative to ``v_max``:
+
+    q(p) = round(p / v_max * 2**frac_bits)
+
+``frac_bits`` defaults to 24 so that group radii ``Delta_i`` (Eqn. 4) and
+bit masks never overflow the positive int32 range even for v_max-sized
+values, while retaining ~1.5e-8 * v_max resolution -- far below any
+TD-error noise floor.
+
+The prefix-based query strategy (Fig. 6(b2)) is reproduced bit-exactly:
+given a radius ``delta`` the mask generator finds the position ``p`` of the
+leftmost '1' in ``delta`` and declares bit ``p`` and everything below it
+don't-care.  A stored word matches iff its remaining (prefix) bits equal
+the query's:  ``(stored ^ query) & ~mask == 0``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_FRAC_BITS = 24
+
+
+def quantize(p: jax.Array, v_max: float, frac_bits: int = DEFAULT_FRAC_BITS) -> jax.Array:
+    """Map float priorities in [0, v_max] to int32 fixed point.
+
+    The top code is 2**frac_bits - 1 (all ones), NOT 2**frac_bits: a
+    saturated priority must remain inside the largest prefix-aligned
+    block below the range ceiling, otherwise v_max-clipped priorities sit
+    one past every possible TCAM prefix query and become unmatchable
+    (observed as INVERTED prioritization in the DQN integration).
+    """
+    top = (1 << frac_bits) - 1
+    scale = top / v_max
+    q = jnp.round(jnp.clip(p, 0.0, v_max) * scale)
+    return jnp.minimum(q, top).astype(jnp.int32)
+
+
+def dequantize(q: jax.Array, v_max: float, frac_bits: int = DEFAULT_FRAC_BITS) -> jax.Array:
+    """Inverse of :func:`quantize` (up to rounding)."""
+    scale = v_max / ((1 << frac_bits) - 1)
+    return q.astype(jnp.float32) * scale
+
+
+def prefix_mask(delta: jax.Array) -> jax.Array:
+    """Don't-care mask for radius ``delta`` (int32), per Fig. 6(b2).
+
+    Bits at and below the leftmost '1' of ``delta`` are don't-care (mask=1).
+    ``delta == 0`` yields mask 0 (exact match).  Matches the paper's OR-gate
+    mask generator: for an 8-bit example with leftmost '1' at position 4,
+    the mask is 0001_1111.
+    """
+    delta = delta.astype(jnp.int32)
+    nbits = 32
+    # position of leftmost '1'; clz(0) == 32 -> p_pos == -1 -> mask == 0.
+    p_pos = (nbits - 1) - jax.lax.clz(jnp.maximum(delta, 0))
+    # (1 << (p_pos + 1)) - 1, guarded for p_pos == -1 and p_pos == 31.
+    shifted = jnp.where(p_pos >= 31, jnp.int32(-1), (jnp.int32(1) << (p_pos + 1)) - 1)
+    return jnp.where(delta <= 0, jnp.int32(0), shifted)
+
+
+def ternary_match(stored: jax.Array, query: jax.Array, mask: jax.Array) -> jax.Array:
+    """Exact-match TCAM semantics with don't-care bits.
+
+    ``stored`` is any int32 array; ``query``/``mask`` broadcast against it.
+    A row matches iff every non-masked bit XNORs to 1.
+    """
+    return jnp.bitwise_and(jnp.bitwise_xor(stored, query), jnp.bitwise_not(mask)) == 0
+
+
+def prefix_range(query: jax.Array, mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """[lo, hi] int32 range accepted by a prefix query (inclusive).
+
+    Useful for reasoning about the power-of-2 approximation error: the
+    accepted range is ``[query & ~mask, (query & ~mask) | mask]``.
+    """
+    lo = jnp.bitwise_and(query, jnp.bitwise_not(mask))
+    hi = jnp.bitwise_or(lo, mask)
+    return lo, hi

@@ -1,0 +1,95 @@
+"""Functional experience-replay buffer (Fig. 1's ER memory).
+
+Stores an arbitrary transition pytree in a ring buffer with a pluggable
+priority sampler (uniform / PER sum-tree / PER cumsum / AMPER-k / AMPER-fr).
+Everything is pure and jit-able; the buffer state is a pytree that can be
+donated through a training step or sharded across a mesh.
+
+New experiences enter with the current maximum priority (the standard PER
+convention: ensures every transition is replayed at least once); sampled
+transitions get their priority rewritten from the fresh TD error after the
+train step — the store / sample / update cycle of Fig. 1.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ReplayState(NamedTuple):
+    storage: Any          # pytree of arrays with leading dim = capacity
+    sampler_state: Any    # state of the priority sampler
+    pos: jax.Array        # int32 next write slot
+    size: jax.Array       # int32 live count
+    max_priority: jax.Array  # float32 running max (for new entries)
+
+
+class ReplayBuffer:
+    """Ring buffer + priority sampler.
+
+    Args:
+      capacity: number of transitions.
+      sampler: object exposing init/update/sample/priorities (see core.amper).
+      alpha: PER exponent; priorities stored as (|td| + eps)^alpha.
+      beta: importance-sampling exponent for weight computation.
+    """
+
+    def __init__(self, capacity: int, sampler, alpha: float = 0.6,
+                 beta: float = 0.4, eps: float = 1e-2):
+        self.capacity = capacity
+        self.sampler = sampler
+        self.alpha = alpha
+        self.beta = beta
+        self.eps = eps
+
+    def init(self, example_transition: Any) -> ReplayState:
+        storage = jax.tree.map(
+            lambda x: jnp.zeros((self.capacity,) + jnp.shape(x), jnp.asarray(x).dtype),
+            example_transition,
+        )
+        return ReplayState(
+            storage=storage,
+            sampler_state=self.sampler.init(),
+            pos=jnp.int32(0),
+            size=jnp.int32(0),
+            max_priority=jnp.float32(1.0),
+        )
+
+    def add(self, state: ReplayState, transition: Any) -> ReplayState:
+        """Store one transition at the ring position with max priority."""
+        storage = jax.tree.map(
+            lambda buf, x: buf.at[state.pos].set(x), state.storage, transition
+        )
+        sampler_state = self.sampler.update(
+            state.sampler_state, state.pos[None], state.max_priority[None]
+        )
+        return ReplayState(
+            storage=storage,
+            sampler_state=sampler_state,
+            pos=(state.pos + 1) % self.capacity,
+            size=jnp.minimum(state.size + 1, self.capacity),
+            max_priority=state.max_priority,
+        )
+
+    def sample(self, state: ReplayState, key: jax.Array, batch: int):
+        """Returns (indices, transitions, is_weights)."""
+        idx = self.sampler.sample(state.sampler_state, key, batch)
+        batch_tree = jax.tree.map(lambda buf: buf[idx], state.storage)
+        prios = self.sampler.priorities(state.sampler_state)
+        total = jnp.maximum(jnp.sum(prios), 1e-12)
+        p_sel = jnp.maximum(prios[idx], 1e-12) / total
+        w = (jnp.maximum(state.size, 1).astype(jnp.float32) * p_sel) ** (-self.beta)
+        w = w / jnp.maximum(jnp.max(w), 1e-12)
+        return idx, batch_tree, w
+
+    def update_priorities(self, state: ReplayState, idx: jax.Array,
+                          td_error: jax.Array) -> ReplayState:
+        """Rewrite priorities from fresh TD errors (Sec. 3.4.3: plain write)."""
+        p = (jnp.abs(td_error) + self.eps) ** self.alpha
+        sampler_state = self.sampler.update(state.sampler_state, idx, p)
+        return state._replace(
+            sampler_state=sampler_state,
+            max_priority=jnp.maximum(state.max_priority, jnp.max(p)),
+        )

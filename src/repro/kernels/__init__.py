@@ -1,0 +1,5 @@
+"""Pallas TPU kernels: TCAM-style match (the paper's search op) + attention.
+
+Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py;
+tests/test_kernels.py sweeps shapes/dtypes and asserts allclose.
+"""

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: single-token (decode) attention over a KV cache.
+
+The decode cells' hot-spot: one query position against an S-long cache,
+memory-bound at (params + cache)/HBM_bw.  This kernel streams the cache
+through (bkv, d) VMEM tiles with online-softmax scratch — the in-chip
+half of split-KV decoding (the cross-chip half is the psum combine the
+SPMD partitioner inserts when the cache's S axis is sharded over
+"model"; see models/attention.py::decode_attention).
+
+GQA/MQA: q arrives grouped as (B, Hkv, group, D); each grid step loads
+one kv head's tile once and serves all `group` query heads from it —
+the memory-traffic-optimal schedule for MQA decode.
+
+Masking: positions >= cur_len are dead (cache tail); cur_len is read
+from an SMEM-style (1,) operand.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, bkv: int, nkv: int, scale: float):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full(m_scr.shape, NEG_INF, jnp.float32)
+        l_scr[...] = jnp.zeros(l_scr.shape, jnp.float32)
+        acc_scr[...] = jnp.zeros(acc_scr.shape, jnp.float32)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale       # (group, d)
+    k = k_ref[0, 0].astype(jnp.float32)               # (bkv, d)
+    v = v_ref[0, 0].astype(jnp.float32)               # (bkv, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (group, bkv)
+
+    kpos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < len_ref[0], s, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(p.astype(v.dtype), v)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == nkv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         cur_len: jax.Array, *, bkv: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """q: [B, Hkv, group, D]; k, v: [B, Hkv, S, D]; cur_len: int32 scalar.
+
+    Returns [B, Hkv, group, D] attention output (q.dtype).  S must be a
+    multiple of bkv (the ops.py wrapper pads; padded rows are masked by
+    cur_len).
+    """
+    b, hkv, group, d = q.shape
+    s_len = k.shape[2]
+    nkv = s_len // bkv
+    scale = 1.0 / (d ** 0.5)
+
+    from jax.experimental.pallas import tpu as pltpu
+    kernel = functools.partial(_decode_kernel, bkv=bkv, nkv=nkv, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hkv, nkv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bb, h, ki: (0,)),
+            pl.BlockSpec((1, 1, group, d), lambda bb, h, ki: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda bb, h, ki: (bb, h, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, d), lambda bb, h, ki: (bb, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, group, d), lambda bb, h, ki: (bb, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, 1), jnp.float32),
+            pltpu.VMEM((group, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cur_len.reshape(1), q, k, v)

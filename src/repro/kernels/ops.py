@@ -1,0 +1,119 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Handles padding to TPU tile boundaries, dtype plumbing, and the
+interpret-mode switch (kernels execute in Python on CPU backends so the
+whole suite validates without TPU silicon; on TPU backends they lower to
+Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import flash_attention as _fa
+from repro.kernels import tcam_match as _tm
+
+LANES = _tm.LANES
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_table(pq: jax.Array, valid: jax.Array, block_rows: int):
+    """Pad a flat int32 table to (R, 128) with R % block_rows == 0."""
+    n = pq.shape[0]
+    tile = block_rows * LANES
+    n_pad = -n % tile
+    pq = jnp.pad(pq, (0, n_pad), constant_values=-1)
+    valid = jnp.pad(valid, (0, n_pad), constant_values=False)
+    rows = (n + n_pad) // LANES
+    return pq.reshape(rows, LANES), valid.reshape(rows, LANES), n
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def tcam_match(pq: jax.Array, query: jax.Array, mask: jax.Array, *,
+               block_rows: int = _tm.DEFAULT_BLOCK_ROWS,
+               interpret: bool | None = None) -> jax.Array:
+    """Single ternary-CAM query over a flat int32[n] table -> bool[n]."""
+    interpret = _interpret_default() if interpret is None else interpret
+    pq2, _, n = _pad_table(pq, jnp.ones_like(pq, jnp.bool_), block_rows)
+    out = _tm.tcam_match(pq2, jnp.asarray(query, jnp.int32),
+                         jnp.asarray(mask, jnp.int32),
+                         block_rows=block_rows, interpret=interpret)
+    return out.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def multi_query_match(pq: jax.Array, valid: jax.Array, lo: jax.Array,
+                      hi: jax.Array, *,
+                      block_rows: int = _tm.DEFAULT_BLOCK_ROWS,
+                      interpret: bool | None = None):
+    """Fused m-range AMPER search over a flat table.
+
+    Returns (sel bool[n], counts int32[m]).  Padding rows carry pq = -1
+    (matches no non-negative range) and valid = False.
+    """
+    interpret = _interpret_default() if interpret is None else interpret
+    pq2, valid2, n = _pad_table(pq, valid, block_rows)
+    sel, counts = _tm.multi_query_match(
+        pq2, valid2, lo.astype(jnp.int32), hi.astype(jnp.int32),
+        block_rows=block_rows, interpret=interpret)
+    return sel.reshape(-1)[:n], counts
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bkv",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    bq: int = 128, bkv: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """Blockwise attention with seq/head-dim padding to tile boundaries."""
+    interpret = _interpret_default() if interpret is None else interpret
+    b, hq, s, d = q.shape
+    s_pad = -s % max(bq, bkv)
+    d_pad = -d % LANES
+    if s_pad or d_pad:
+        pad4 = ((0, 0), (0, 0), (0, s_pad), (0, d_pad))
+        # Pre-scale q so the kernel's 1/sqrt(d_padded) equals the true
+        # 1/sqrt(d): zero-padding the head dim leaves q.k unchanged, only
+        # the softmax temperature needs the correction, applied to q.
+        if d_pad:
+            q = q * (((d + d_pad) / d) ** 0.5)
+        q = jnp.pad(q, pad4)
+        k = jnp.pad(k, pad4)
+        v = jnp.pad(v, pad4)
+    # Padded KV columns sit at positions >= s, so causal/window geometry
+    # masks them for every real q row.  Non-causal inputs must be aligned.
+    if not causal and s_pad:
+        raise ValueError("non-causal flash path requires tile-aligned seq")
+    out = _fa.flash_attention_fwd(q, k, v, causal=causal, window=window,
+                                  bq=bq, bkv=bkv, interpret=interpret)
+    if d_pad or s_pad:
+        out = out[:, :, :s, :d]
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("bkv", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     cur_len, *, bkv: int = 512,
+                     interpret: bool | None = None) -> jax.Array:
+    """Single-token cache attention; pads S and D to tile boundaries."""
+    interpret = _interpret_default() if interpret is None else interpret
+    b, hkv, group, d = q.shape
+    s_len = k.shape[2]
+    s_pad = -s_len % bkv
+    d_pad = -d % LANES
+    if d_pad:
+        q = q * (((d + d_pad) / d) ** 0.5)  # keep true softmax temperature
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, d_pad)))
+    if s_pad or d_pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, s_pad), (0, d_pad)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, s_pad), (0, d_pad)))
+    out = _da.decode_attention_fwd(q, k, v, jnp.asarray(cur_len, jnp.int32),
+                                   bkv=min(bkv, k.shape[2]),
+                                   interpret=interpret)
+    return out[..., :d]

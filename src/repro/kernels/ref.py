@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel test sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tcam_match_ref(pq: jax.Array, query: jax.Array, mask: jax.Array) -> jax.Array:
+    """Oracle for kernels.tcam_match.tcam_match."""
+    return jnp.bitwise_and(jnp.bitwise_xor(pq, query), jnp.bitwise_not(mask)) == 0
+
+
+def multi_query_match_ref(pq: jax.Array, valid: jax.Array, lo: jax.Array,
+                          hi: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Oracle for kernels.tcam_match.multi_query_match (flat pq[n])."""
+    match = (pq[None, :] >= lo[:, None]) & (pq[None, :] <= hi[:, None])
+    match = match & valid[None, :]
+    sel = jnp.any(match, axis=0)
+    counts = jnp.sum(match.astype(jnp.int32), axis=1)
+    return sel, counts
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int | None = None) -> jax.Array:
+    """Oracle for kernels.flash_attention (materialised softmax, f32)."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s_mat = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) / (d ** 0.5)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), jnp.bool_)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s_mat = jnp.where(mask, s_mat, -1e30)
+    p = jax.nn.softmax(s_mat, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         cur_len) -> jax.Array:
+    """Oracle for kernels.decode_attention. q:[B,Hkv,g,D]; k,v:[B,Hkv,S,D]."""
+    b, hkv, g, d = q.shape
+    s_len = k.shape[2]
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    mask = jnp.arange(s_len) < cur_len
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,376 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell we build the REAL jitted step (train_step / prefill /
+decode_step) with in/out shardings derived from the logical-axis rules,
+``.lower().compile()`` it against ShapeDtypeStruct inputs (no
+allocation), and record memory_analysis / cost_analysis / collective
+bytes — the inputs to the §Roofline analysis.
+
+Also dry-runs the PAPER'S OWN workload at production scale: the sharded
+AMPER-fr sampler over a 2^28-entry priority table on the full mesh.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-34b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed import sharding as shd
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models.model_api import Model, SHAPE_CELLS
+from repro.train import train_step as ts_mod
+from repro.train.optimizer import AdamW, cosine_schedule
+
+
+def _divisible_sharding(rules: shd.ShardingRules, spec_axes, aval):
+    """NamedSharding, dropping mesh axes that don't divide the dim."""
+    pspec = rules.spec(spec_axes)
+    parts = []
+    for i, entry in enumerate(pspec):
+        if entry is None:
+            parts.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else entry
+        total = 1
+        for a in axes:
+            total *= rules.mesh.shape[a]
+        parts.append(entry if aval.shape[i] % total == 0 else None)
+    return NamedSharding(rules.mesh, P(*parts))
+
+
+def tree_input_shardings(rules, axes_tree, aval_tree):
+    return jax.tree.map(
+        lambda axes, aval: _divisible_sharding(rules, axes, aval),
+        axes_tree, aval_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None), tuple)) for e in x))
+
+
+def batch_axes_like(batch_avals, batch_axis=("batch",)):
+    """Logical axes for an input batch pytree: shard dim0 over batch."""
+    return jax.tree.map(
+        lambda a: ("batch",) + (None,) * (len(a.shape) - 1), batch_avals)
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               donate: bool = True, unroll: bool = False,
+               cfg_overrides: dict | None = None,
+               rules_preset: str = "tp"):
+    """Returns (lowered, mesh, cfg, model_flops) or a skip marker.
+
+    unroll=True builds the analysis variant (python loop over layers) so
+    cost_analysis reports true per-step totals; the production build
+    keeps lax.scan (depth-free HLO, the runnability proof).
+    """
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if unroll:
+        cfg = _dc.replace(cfg, unroll_layers=True)
+    if cfg_overrides:
+        cfg = _dc.replace(cfg, **cfg_overrides)
+    cell = SHAPE_CELLS[shape]
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return ("skip", "full attention is O(S^2) at 524288; "
+                        "long_500k runs only for SSM/hybrid/SWA archs")
+    if shape == "long_500k" and cfg.family == "audio":
+        return ("skip", "whisper decoder max context exceeded by design")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = Model.from_config(cfg)
+    is_train = cell.kind == "train"
+    rules = shd.ShardingRules(
+        mesh, shd.RULE_PRESETS[rules_preset] if is_train
+        else shd.SERVE_RULES)
+    inputs = model.input_specs(shape)
+    n_tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode" else 1)
+    model_flops = hlo_analysis.analytic_model_flops(
+        cfg, n_tokens, "train" if is_train else "serve")
+
+    with mesh, shd.use_rules(rules):
+        if is_train:
+            opt = AdamW(cosine_schedule(3e-4, 100, 10_000),
+                        mixed_precision=(cfg.param_dtype == "bfloat16"))
+            step_fn = ts_mod.make_train_step(model, opt)
+            state_aval = ts_mod.abstract_train_state(model, opt)
+            state_axes = ts_mod.train_state_axes(model, opt)
+            state_sh = tree_input_shardings(rules, state_axes, state_aval)
+            batch_sh = tree_input_shardings(
+                rules, batch_axes_like(inputs), inputs)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,) if donate else ())
+            lowered = jitted.lower(state_aval, inputs)
+        elif cell.kind == "prefill":
+            params_aval = model.abstract_params()
+            params_sh = tree_input_shardings(rules, model.param_axes(),
+                                             params_aval)
+            batch_sh = tree_input_shardings(
+                rules, batch_axes_like(inputs), inputs)
+            fn = functools.partial(model.prefill, max_len=cell.seq_len)
+            jitted = jax.jit(lambda p, b: fn(p, b),
+                             in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params_aval, inputs)
+        else:  # decode
+            params_aval = model.abstract_params()
+            params_sh = tree_input_shardings(rules, model.param_axes(),
+                                             params_aval)
+            cache_aval = inputs["cache"]
+            cache_sh = tree_input_shardings(rules, model.cache_axes(),
+                                            cache_aval)
+            tok_sh = _divisible_sharding(rules, ("batch", None),
+                                         inputs["tokens"])
+            jitted = jax.jit(model.decode_step,
+                             in_shardings=(params_sh, tok_sh, cache_sh),
+                             out_shardings=(None, cache_sh),
+                             donate_argnums=(2,) if donate else ())
+            lowered = jitted.lower(params_aval, inputs["tokens"], cache_aval)
+    return lowered, mesh, cfg, model_flops
+
+
+def _raw_quantities(arch, shape, multi_pod, cfg_overrides,
+                    rules_preset="tp") -> dict:
+    """Per-device HLO flops / bytes / collective-bytes of one unrolled build."""
+    lowered, mesh, _, _ = lower_cell(arch, shape, multi_pod, unroll=True,
+                                     cfg_overrides=cfg_overrides,
+                                     rules_preset=rules_preset)
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis()
+    coll = hlo_analysis.collective_bytes(compiled.as_text())
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0)),
+            "coll_bytes": coll.total_bytes,
+            "coll_counts": coll.counts,
+            "coll_by_kind": coll.bytes_by_kind}
+
+
+def analysis_report(arch, shape, multi_pod, cfg, model_flops,
+                    cfg_overrides=None, rules_preset="tp") -> dict:
+    """True per-step totals for the roofline.
+
+    Shallow models: one unrolled build at full depth.  Deep models: per-
+    step HLO totals are exactly linear in stack depth for a homogeneous
+    stack (layer work, grad psums and optimizer update all scale with L;
+    embed/loss/head are the intercept), so we compile unrolled builds at
+    two small depths and extrapolate — granite-88L analyses in ~2 min
+    instead of ~30.  Analytic inner-loop corrections are added at full
+    depth afterwards.
+    """
+    import dataclasses as _dc
+    cell = SHAPE_CELLS[shape]
+    base_over = dict(cfg_overrides or {})
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dense = cfg.first_dense_layers if cfg.n_experts else 0
+
+    if cfg.n_layers <= 12:
+        q = _raw_quantities(arch, shape, multi_pod, base_over, rules_preset)
+    else:
+        l1, l2 = n_dense + 2, n_dense + 8
+        q1 = _raw_quantities(arch, shape, multi_pod,
+                             {**base_over, "n_layers": l1}, rules_preset)
+        q2 = _raw_quantities(arch, shape, multi_pod,
+                             {**base_over, "n_layers": l2}, rules_preset)
+        L = cfg.n_layers
+
+        def lin(a, b):
+            return a + (b - a) / (l2 - l1) * (L - l1)
+
+        q = {"flops": lin(q1["flops"], q2["flops"]),
+             "bytes": lin(q1["bytes"], q2["bytes"]),
+             "coll_bytes": lin(q1["coll_bytes"], q2["coll_bytes"]),
+             "coll_counts": {k: int(lin(q1["coll_counts"].get(k, 0),
+                                        q2["coll_counts"].get(k, 0)))
+                             for k in set(q1["coll_counts"])
+                             | set(q2["coll_counts"])},
+             "coll_by_kind": {k: lin(q1["coll_by_kind"].get(k, 0.0),
+                                     q2["coll_by_kind"].get(k, 0.0))
+                              for k in set(q1["coll_by_kind"])
+                              | set(q2["coll_by_kind"])}}
+
+    corr = hlo_analysis.inner_corrections(cfg, cell.kind, cell.global_batch,
+                                          cell.seq_len)
+    n_dev = mesh.devices.size
+    roof = hlo_analysis.Roofline(
+        flops=q["flops"] + corr["flops"] / n_dev,
+        bytes_accessed=q["bytes"] + corr["bytes"] / n_dev,
+        coll_bytes_per_dev=q["coll_bytes"],
+        n_devices=n_dev, model_flops=model_flops)
+    return {"roofline": roof.as_dict(),
+            "hlo_flops_raw": q["flops"],
+            "correction_flops": corr["flops"] / n_dev,
+            "collectives": {"counts": q["coll_counts"],
+                            "bytes_by_kind": q["coll_by_kind"]}}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             analyze: bool = True, cfg_overrides: dict | None = None,
+             rules_preset: str = "tp") -> dict:
+    """Production (scan) build: compile proof + memory analysis.
+    Analysis (unrolled) build: true flops/bytes/collectives -> roofline."""
+    t0 = time.time()
+    out = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    cell = SHAPE_CELLS[shape]
+    try:
+        res = lower_cell(arch, shape, multi_pod,
+                         cfg_overrides=cfg_overrides,
+                         rules_preset=rules_preset)
+        if res[0] == "skip":
+            out.update(status="skip", reason=res[1])
+            return out
+        lowered, mesh, cfg, model_flops = res
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        out.update(
+            status="ok", lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory={
+                "argument_bytes_per_dev": ma.argument_size_in_bytes,
+                "output_bytes_per_dev": ma.output_size_in_bytes,
+                "temp_bytes_per_dev": ma.temp_size_in_bytes,
+                "peak_bytes_per_dev": (ma.argument_size_in_bytes
+                                       + ma.temp_size_in_bytes),
+            })
+        if analyze:
+            t1 = time.time()
+            report = analysis_report(arch, shape, multi_pod, cfg,
+                                      model_flops, cfg_overrides,
+                                      rules_preset)
+            out.update(analysis_compile_s=round(time.time() - t1, 2),
+                       **report)
+            if cell.kind == "decode":
+                # bandwidth floor: params + cache must stream once/token.
+                model = Model.from_config(cfg)
+                p_bytes = sum(a.size * a.dtype.itemsize for a in
+                              jax.tree.leaves(model.abstract_params()))
+                c_bytes = sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(
+                    jax.eval_shape(lambda: model.init_cache(
+                        cell.global_batch, cell.seq_len))))
+                n_dev = mesh.devices.size
+                floor = (p_bytes + c_bytes) / n_dev
+                actual = out["roofline"]["bytes_accessed"]
+                out["decode_bandwidth"] = {
+                    "floor_bytes_per_dev": floor,
+                    "actual_bytes_per_dev": actual,
+                    "bandwidth_efficiency": floor / max(actual, 1.0),
+                    "floor_latency_s": floor / hlo_analysis.HBM_BW,
+                }
+    except Exception as e:  # a cell failure is a bug — surface it loudly
+        out.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return out
+
+
+def run_amper_cell(multi_pod: bool, table_log2: int = 28,
+                   batch: int = 65536) -> dict:
+    """The paper's own workload at scale: sharded AMPER-fr sampling."""
+    from repro.core.amper import AmperConfig
+    from repro.core import sharded as shc
+    out = {"arch": "amper-replay", "shape": f"sample_2^{table_log2}",
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n = 1 << table_log2
+        axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+        cfg = AmperConfig(capacity=n, m=20, lam_fr=2.0,
+                          csp_capacity=int(n * 0.15))
+        fn = shc.sharded_sample_fr(mesh, cfg, batch, axis_names=axes)
+        spec = P(tuple(axes))
+        pq = jax.ShapeDtypeStruct((n,), jnp.int32,
+                                  sharding=NamedSharding(mesh, spec))
+        valid = jax.ShapeDtypeStruct((n,), jnp.bool_,
+                                     sharding=NamedSharding(mesh, spec))
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        with mesh:
+            lowered = jax.jit(fn).lower(pq, valid, key)
+            compiled = lowered.compile()
+        report = hlo_analysis.analyze(compiled, mesh, model_flops=None)
+        out.update(status="ok", compile_s=round(time.time() - t0, 2), **report)
+    except Exception as e:
+        out.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--amper", action="store_true",
+                    help="also dry-run the sharded AMPER sampler")
+    ap.add_argument("--rules", default="tp", choices=["tp", "fsdp"],
+                    help="train sharding preset (hillclimb knob)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (repeatable), e.g. "
+                         "--set param_dtype=bfloat16 --set ce_block=4096")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = eval(v)  # ints/floats/bools/tuples
+        except Exception:
+            pass
+        overrides[k] = v
+
+    cells = []
+    if args.all:
+        archs, shapes = list(ARCH_IDS), list(SHAPE_CELLS)
+    else:
+        archs = [args.arch] if args.arch else list(ARCH_IDS)
+        shapes = [args.shape] if args.shape else list(SHAPE_CELLS)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    for mp in meshes:
+        for arch in archs:
+            for shape in shapes:
+                r = run_cell(arch, shape, mp, cfg_overrides=overrides or None,
+                             rules_preset=args.rules)
+                results.append(r)
+                roof = r.get("roofline", {})
+                print(f"[{r['mesh']}] {arch} x {shape}: {r['status']}"
+                      + (f" bottleneck={roof.get('bottleneck')}"
+                         f" frac={roof.get('roofline_fraction')}"
+                         if r["status"] == "ok" else
+                         f" ({r.get('reason', r.get('error'))})"),
+                      flush=True)
+        if args.amper:
+            r = run_amper_cell(mp)
+            results.append(r)
+            print(f"[{r['mesh']}] amper-replay: {r['status']}", flush=True)
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+        print(f"wrote {args.out}")
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"done: {len(results)} cells, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,24 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so that
+importing this module never touches jax device state — required because
+the dry-run forces 512 host devices via XLA_FLAGS before first jax init,
+while tests/benches must keep seeing 1 CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int | None = None,
+                    model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests, examples)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,311 @@
+"""Attention blocks: GQA/MQA (+SWA, prefix-LM) and MLA, train & decode paths.
+
+The differentiable training/prefill path is *chunked* (online-softmax over
+KV blocks inside a ``lax.scan``, with ``jax.remat`` on the inner step so
+the backward pass recomputes per-block probabilities instead of storing
+S^2 residuals).  The Pallas flash kernel (kernels/flash_attention.py) is
+the serving fast path; both agree with kernels/ref.py.
+
+Masks are expressed as position predicates so causal, sliding-window
+(possibly per-layer dynamic, for hymba's global/SWA mix) and prefix-LM
+(paligemma) all flow through one code path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import ParamSpec
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Mask predicates
+# ---------------------------------------------------------------------------
+
+def make_mask_fn(causal: bool, window, prefix_len) -> Callable:
+    """Returns mask_fn(qpos, kpos) -> bool. window/prefix_len may be traced."""
+
+    def mask_fn(qpos: jax.Array, kpos: jax.Array) -> jax.Array:
+        ok = jnp.ones(jnp.broadcast_shapes(qpos.shape, kpos.shape), jnp.bool_)
+        if causal:
+            ok &= qpos >= kpos
+        if window is not None:
+            ok &= (qpos - kpos) < window
+        if prefix_len is not None:
+            ok |= kpos < prefix_len  # bidirectional over the prefix
+            ok &= kpos <= jnp.maximum(qpos, prefix_len - 1) if causal else ok
+        return ok
+
+    return mask_fn
+
+
+# ---------------------------------------------------------------------------
+# Chunked (memory-efficient, differentiable) attention
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      mask_fn: Callable, *, bq: int, bkv: int,
+                      q_offset: int = 0,
+                      skip_info: Optional[tuple] = None) -> jax.Array:
+    """Online-softmax attention. q:[B,Hq,S,D] k,v:[B,Hkv,Skv,Dv].
+
+    Memory per step is O(bq*bkv); the inner step is remat'd so backward
+    never materialises S^2.  GQA handled by reshaping q into
+    (Hkv, group) — no key/value broadcast is materialised.
+
+    skip_info=(causal, window): STATIC mask geometry.  When given (and
+    self-attention, q_offset==0), q block i only visits kv blocks in its
+    causal/window reach — a python loop with per-block static bounds, so
+    fully-masked blocks are never computed (−50% FLOPs causal at S=S_kv,
+    more with a window).  Numerically identical to the full sweep.
+    """
+    B, Hq, S, D = q.shape
+    Hkv, Skv, Dv = k.shape[1], k.shape[2], v.shape[3]
+    group = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+
+    s_pad = -S % bq
+    skv_pad = -Skv % bkv
+    q = jnp.pad(q, ((0, 0), (0, 0), (0, s_pad), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, 0), (0, skv_pad), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, 0), (0, skv_pad), (0, 0)))
+    nq, nkv = (S + s_pad) // bq, (Skv + skv_pad) // bkv
+
+    qs = q.reshape(B, Hkv, group, nq, bq, D).transpose(3, 0, 1, 2, 4, 5) * scale
+    ks = k.reshape(B, Hkv, nkv, bkv, D).transpose(2, 0, 1, 3, 4)
+    vs = v.reshape(B, Hkv, nkv, bkv, Dv).transpose(2, 0, 1, 3, 4)
+    kpos_pad = jnp.arange(nkv * bkv).reshape(nkv, bkv) >= Skv  # padded kv
+
+    def kv_step_for(qpos, qblk):
+        def kv_step(carry, inp):
+            ki, kblk, vblk, kpad = inp
+            m_prev, l_prev, acc = carry
+            s = jnp.einsum("bkgqd,bkud->bkgqu", qblk.astype(jnp.float32),
+                           kblk.astype(jnp.float32))
+            kpos = ki * bkv + jnp.arange(bkv)
+            mask = mask_fn(qpos[:, None], kpos[None, :]) & ~kpad[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_prev - m_new)
+            l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqu,bkud->bkgqd", p, vblk.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+        return kv_step
+
+    def init_carry():
+        return (jnp.full((B, Hkv, group, bq), NEG_INF, jnp.float32),
+                jnp.zeros((B, Hkv, group, bq), jnp.float32),
+                jnp.zeros((B, Hkv, group, bq, Dv), jnp.float32))
+
+    can_skip = (skip_info is not None and skip_info[0] is True
+                and (skip_info[1] is None or isinstance(skip_info[1], int))
+                and q_offset == 0 and S == Skv)
+    if can_skip:
+        window = skip_info[1]
+        outs = []
+        for qi in range(nq):
+            hi = min(-(-((qi + 1) * bq) // bkv), nkv)
+            lo = 0 if window is None else max(0, (qi * bq - window) // bkv)
+            qpos = qi * bq + jnp.arange(bq)
+            (m, l, acc), _ = jax.lax.scan(
+                jax.remat(kv_step_for(qpos, qs[qi])), init_carry(),
+                (jnp.arange(lo, hi), ks[lo:hi], vs[lo:hi], kpos_pad[lo:hi]))
+            outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+        out = jnp.stack(outs)  # (nq, B, Hkv, g, bq, Dv)
+    else:
+        def one_q_block(args):
+            qi, qblk = args
+            qpos = q_offset + qi * bq + jnp.arange(bq)
+            (m, l, acc), _ = jax.lax.scan(
+                jax.remat(kv_step_for(qpos, qblk)), init_carry(),
+                (jnp.arange(nkv), ks, vs, kpos_pad))
+            return acc / jnp.maximum(l, 1e-30)[..., None]
+
+        out = jax.lax.map(one_q_block, (jnp.arange(nq), qs))
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, nq * bq, Dv)
+    return out[:, :, :S].astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cur_len: jax.Array, mask_fn: Callable) -> jax.Array:
+    """Single-position attention against a cache. q:[B,Hq,1,D] caches:[B,Hkv,Smax,D].
+
+    The KV sequence axis may be sharded over the "model" mesh axis —
+    the max/sum reductions then compile to the split-KV (flash-decoding)
+    collective schedule automatically.
+    """
+    B, Hq, _, D = q.shape
+    Hkv, Smax = k_cache.shape[1], k_cache.shape[2]
+    group = Hq // Hkv
+    qpos = cur_len - 1
+    kpos = jnp.arange(Smax)
+    mask = mask_fn(qpos[None], kpos) & (kpos < cur_len)
+
+    qg = q.reshape(B, Hkv, group, D)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / (D ** 0.5)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, 1, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def gqa_specs(cfg, stacked: int | None) -> dict:
+    lead = (stacked,) if stacked else ()
+    lx = ("layers",) if stacked else ()
+    D, Hq, Hkv, Hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamSpec(lead + (D, Hq * Hd), lx + ("embed", "qkv")),
+        "wk": ParamSpec(lead + (D, Hkv * Hd), lx + ("embed", "kv")),
+        "wv": ParamSpec(lead + (D, Hkv * Hd), lx + ("embed", "kv")),
+        "wo": ParamSpec(lead + (Hq * Hd, D), lx + ("qkv", "embed")),
+    }
+
+
+def gqa_project(cfg, p, x, positions, *, rope: bool = True):
+    """x:[B,S,D] -> q:[B,Hq,S,Hd], k/v:[B,Hkv,S,Hd] (roped)."""
+    B, S, _ = x.shape
+    Hq, Hkv, Hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, Hq, Hd).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, Hkv, Hd).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, Hkv, Hd).transpose(0, 2, 1, 3)
+    if rope:
+        q = common.apply_rope(q, positions[:, None], cfg.rope_theta)
+        k = common.apply_rope(k, positions[:, None], cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(cfg, p, x, positions, mask_fn, *, rope: bool = True,
+              kv_override=None, return_kv: bool = False, skip_info=None):
+    """Full-sequence GQA/MQA/MHA attention (training / prefill).
+
+    kv_override: (k, v) from an encoder for cross-attention.
+    return_kv: also return (k, v) for cache construction at prefill.
+    """
+    B, S, D = x.shape
+    q, k, v = gqa_project(cfg, p, x, positions, rope=rope)
+    if kv_override is not None:
+        k, v = kv_override
+    out = chunked_attention(q, k, v, mask_fn, bq=min(cfg.q_block, S),
+                            bkv=min(cfg.kv_block, k.shape[2]),
+                            skip_info=None if kv_override is not None
+                            else skip_info)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.head_dim)
+    out = out @ p["wo"].astype(x.dtype)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def gqa_decode(cfg, p, x, cache: dict, mask_fn, *, rope: bool = True):
+    """One-token decode. x:[B,1,D]; cache: {k:[B,Hkv,Smax,Hd], v:..., len}."""
+    B = x.shape[0]
+    Hq, Hkv, Hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pos = cache["len"]  # int32 scalar: tokens already in cache
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q, k, v = gqa_project(cfg, p, x, positions, rope=rope)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, pos, 0))
+    out = decode_attention(q, k_cache, v_cache, pos + 1, mask_fn)
+    out = out.reshape(B, 1, Hq * Hd) @ p["wo"].astype(x.dtype)
+    return out, {"k": k_cache, "v": v_cache, "len": pos + 1}
+
+
+# ---------------------------------------------------------------------------
+# MLA block (deepseek-v2): latent-compressed KV
+# ---------------------------------------------------------------------------
+
+def mla_specs(cfg, stacked: int | None) -> dict:
+    lead = (stacked,) if stacked else ()
+    lx = ("layers",) if stacked else ()
+    D, H = cfg.d_model, cfg.n_heads
+    r, nope, rdim, vdim = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq": ParamSpec(lead + (D, H * (nope + rdim)), lx + ("embed", "qkv")),
+        "wkv_a": ParamSpec(lead + (D, r + rdim), lx + ("embed", None)),
+        "kv_norm": ParamSpec(lead + (r,), lx + (None,), init="zeros"),
+        "wkv_b": ParamSpec(lead + (r, H * (nope + vdim)), lx + (None, "qkv")),
+        "wo": ParamSpec(lead + (H * vdim, D), lx + ("qkv", "embed")),
+    }
+
+
+def _mla_qkv(cfg, p, x, positions):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    r, nope, rdim, vdim = cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, nope + rdim)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = common.apply_rope(q_rope.transpose(0, 2, 1, 3), positions[:, None],
+                               cfg.rope_theta).transpose(0, 2, 1, 3)
+
+    kv = x @ p["wkv_a"].astype(x.dtype)
+    c_kv, k_rope = kv[..., :r], kv[..., r:]
+    c_kv = common.rms_norm(c_kv, p["kv_norm"])
+    k_rope = common.apply_rope(k_rope[:, None], positions[:, None],
+                               cfg.rope_theta)[:, 0]  # (B,S,rdim) shared head
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_expand_kv(cfg, p, c_kv, dtype):
+    """Latent -> per-head K_nope and V."""
+    H = cfg.n_heads
+    nope, vdim = cfg.qk_nope_dim, cfg.v_head_dim
+    kv = (c_kv.astype(dtype) @ p["wkv_b"].astype(dtype))
+    kv = kv.reshape(*c_kv.shape[:-1], H, nope + vdim)
+    return kv[..., :nope], kv[..., nope:]
+
+
+def mla_apply(cfg, p, x, positions, mask_fn, *, return_latent: bool = False,
+              skip_info=None):
+    B, S, D = x.shape
+    H = cfg.n_heads
+    nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions)
+    k_nope, v = _mla_expand_kv(cfg, p, c_kv, x.dtype)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1).transpose(0, 2, 1, 3)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, H, rdim))],
+        axis=-1).transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    out = chunked_attention(q, k, v, mask_fn, bq=min(cfg.q_block, S),
+                            bkv=min(cfg.kv_block, S), skip_info=skip_info)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * vdim)
+    out = out @ p["wo"].astype(x.dtype)
+    if return_latent:
+        return out, jnp.concatenate([c_kv, k_rope], axis=-1)
+    return out
+
+
+def mla_decode(cfg, p, x, cache: dict, mask_fn):
+    """MLA decode caches ONLY the latent (r + rdim per token) — the point
+    of MLA: decode_32k cache is 576 B/token instead of H*(nope+v)*2."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    nope, rdim, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    pos = cache["len"]
+    positions = jnp.broadcast_to(pos, (B, 1))
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions)
+    lat = jnp.concatenate([c_kv, k_rope], axis=-1)  # (B,1,r+rdim)
+    lat_cache = jax.lax.dynamic_update_slice(cache["latent"], lat, (0, pos, 0))
+    c_all, kr_all = lat_cache[..., :cfg.kv_lora_rank], lat_cache[..., cfg.kv_lora_rank:]
+    k_nope, v = _mla_expand_kv(cfg, p, c_all, x.dtype)  # (B,Smax,H,·)
+    Smax = k_nope.shape[1]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all[:, :, None], (B, Smax, H, rdim))],
+        axis=-1).transpose(0, 2, 1, 3)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1).transpose(0, 2, 1, 3)
+    out = decode_attention(q, k, v.transpose(0, 2, 1, 3), pos + 1, mask_fn)
+    out = out.reshape(B, 1, H * vdim) @ p["wo"].astype(x.dtype)
+    return out, {"latent": lat_cache, "len": pos + 1}

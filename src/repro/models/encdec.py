@@ -1,0 +1,204 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a stub).
+
+Per the assignment, ``input_specs()`` provides precomputed log-mel frame
+EMBEDDINGS (B, enc_seq, D) — the conv frontend is out of scope.  The
+backbone is faithful: pre-LN transformer, GELU MLPs, LayerNorm,
+bidirectional encoder self-attention, causal decoder self-attention +
+cross-attention, sinusoidal positions (whisper uses sinusoidal encoder /
+learned decoder positions; we use sinusoidal for both so the backbone is
+length-agnostic at the assigned 4k/32k decoder shapes — noted in
+DESIGN.md).
+
+Decode caches: per decoder layer, self-attn K/V plus the cross-attn K/V
+computed ONCE from the encoder output at prefill.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models.common import (ParamSpec, apply_norm, norm_spec,
+                                 scan_layers, sinusoidal_embedding)
+from repro.models.transformer import _adtype, unembed
+
+
+def encdec_param_specs(cfg) -> dict:
+    L_enc, L_dec, D = cfg.n_enc_layers, cfg.n_layers, cfg.d_model
+    enc_block = {
+        "norm1": norm_spec(cfg.norm_kind, D, L_enc),
+        "attn": attn_mod.gqa_specs(cfg, L_enc),
+        "norm2": norm_spec(cfg.norm_kind, D, L_enc),
+        "mlp": mlp_mod.mlp_specs("gelu", D, cfg.d_ff, L_enc),
+    }
+    dec_block = {
+        "norm1": norm_spec(cfg.norm_kind, D, L_dec),
+        "self": attn_mod.gqa_specs(cfg, L_dec),
+        "norm_x": norm_spec(cfg.norm_kind, D, L_dec),
+        "cross": attn_mod.gqa_specs(cfg, L_dec),
+        "norm2": norm_spec(cfg.norm_kind, D, L_dec),
+        "mlp": mlp_mod.mlp_specs("gelu", D, cfg.d_ff, L_dec),
+    }
+    return {
+        "embed": ParamSpec((cfg.vocab_size, D), ("vocab", "embed"), init="embed"),
+        "enc_blocks": enc_block,
+        "enc_norm": norm_spec(cfg.norm_kind, D),
+        "dec_blocks": dec_block,
+        "dec_norm": norm_spec(cfg.norm_kind, D),
+    }
+
+
+def encode(cfg, params, frames):
+    """frames: [B, enc_seq, D] stub embeddings -> encoder states."""
+    B, T, D = frames.shape
+    x = frames.astype(_adtype(cfg))
+    x = x + sinusoidal_embedding(jnp.arange(T), D).astype(x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    mask_fn = attn_mod.make_mask_fn(False, None, None)
+
+    def body(carry, lp):
+        h = apply_norm(cfg.norm_kind, carry, lp["norm1"])
+        a = attn_mod.gqa_apply(cfg, lp["attn"], h, positions, mask_fn,
+                               rope=False)
+        x = carry + a
+        h2 = apply_norm(cfg.norm_kind, x, lp["norm2"])
+        return x + mlp_mod.mlp_apply("gelu", lp["mlp"], h2), None
+
+    if cfg.remat:
+        body = jax.remat(body, prevent_cse=False)
+    x, _ = scan_layers(body, x, params["enc_blocks"],
+                       unroll=cfg.unroll_layers)
+    return apply_norm(cfg.norm_kind, x, params["enc_norm"])
+
+
+def _cross_kv(cfg, lp_cross, enc_out):
+    """Encoder states -> per-layer cross K/V (no rope, whisper-style)."""
+    B, T, D = enc_out.shape
+    Hkv, Hd = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ lp_cross["wk"].astype(enc_out.dtype)).reshape(B, T, Hkv, Hd)
+    v = (enc_out @ lp_cross["wv"].astype(enc_out.dtype)).reshape(B, T, Hkv, Hd)
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+
+def _dec_block(cfg, lp, x, positions, enc_out, mask_fn, cross_mask_fn):
+    h = apply_norm(cfg.norm_kind, x, lp["norm1"])
+    x = x + attn_mod.gqa_apply(cfg, lp["self"], h, positions, mask_fn,
+                               rope=False)
+    hx = apply_norm(cfg.norm_kind, x, lp["norm_x"])
+    ck, cv = _cross_kv(cfg, lp["cross"], enc_out)
+    x = x + attn_mod.gqa_apply(cfg, lp["cross"], hx, positions, cross_mask_fn,
+                               rope=False, kv_override=(ck, cv))
+    h2 = apply_norm(cfg.norm_kind, x, lp["norm2"])
+    return x + mlp_mod.mlp_apply("gelu", lp["mlp"], h2)
+
+
+def forward(cfg, params, tokens, frames):
+    """Teacher-forced decoder logits [B, S, V]."""
+    enc_out = encode(cfg, params, frames)
+    B, S = tokens.shape
+    x = params["embed"].astype(_adtype(cfg))[tokens]
+    x = x + sinusoidal_embedding(jnp.arange(S), cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    mask_fn = attn_mod.make_mask_fn(True, None, None)
+    cross_mask_fn = attn_mod.make_mask_fn(False, None, None)
+
+    def body(carry, lp):
+        return _dec_block(cfg, lp, carry, positions, enc_out, mask_fn,
+                          cross_mask_fn), None
+
+    if cfg.remat:
+        body = jax.remat(body, prevent_cse=False)
+    x, _ = scan_layers(body, x, params["dec_blocks"],
+                       unroll=cfg.unroll_layers)
+    x = apply_norm(cfg.norm_kind, x, params["dec_norm"])
+    return unembed(cfg, params, x)
+
+
+def encdec_loss(cfg, params, batch):
+    logits = forward(cfg, params, batch["tokens"], batch["frames"])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, batch["targets"][..., None], -1)[..., 0]
+    mask = batch["loss_mask"].astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, {"nll": loss}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int):
+    dt = _adtype(cfg)
+    Hkv, Hd, L = cfg.n_kv_heads, cfg.head_dim, cfg.n_layers
+
+    def z(*shape):
+        return jnp.zeros(shape, dt)
+
+    return {
+        "self_k": z(L, batch, Hkv, max_len, Hd),
+        "self_v": z(L, batch, Hkv, max_len, Hd),
+        "cross_k": z(L, batch, Hkv, cfg.enc_seq, Hd),
+        "cross_v": z(L, batch, Hkv, cfg.enc_seq, Hd),
+        "len": jnp.int32(0),
+    }
+
+
+def encdec_cache_axes(cfg) -> dict:
+    return {"self_k": ("layers", "batch", None, "kv_seq", None),
+            "self_v": ("layers", "batch", None, "kv_seq", None),
+            "cross_k": ("layers", "batch", None, "kv_seq", None),
+            "cross_v": ("layers", "batch", None, "kv_seq", None),
+            "len": ()}
+
+
+def prefill(cfg, params, frames, bos_tokens, max_len: int):
+    """Encode + compute cross K/V for every decoder layer + first token.
+
+    bos_tokens: [B, 1]."""
+    enc_out = encode(cfg, params, frames)
+
+    def kv_body(_, lp_cross):
+        return None, _cross_kv(cfg, lp_cross, enc_out)
+
+    _, (ck, cv) = jax.lax.scan(kv_body, None, params["dec_blocks"]["cross"])
+    cache = init_cache(cfg, bos_tokens.shape[0], max_len)
+    cache["cross_k"], cache["cross_v"] = ck, cv
+    logits, cache = decode_step(cfg, params, bos_tokens, cache)
+    return logits, cache
+
+
+def decode_step(cfg, params, tokens, cache):
+    """One decoder token against cached self/cross K/V."""
+    B = tokens.shape[0]
+    pos = cache["len"]
+    x = params["embed"].astype(_adtype(cfg))[tokens]
+    x = x + sinusoidal_embedding(pos[None, None], cfg.d_model).astype(x.dtype)
+    mask_fn = attn_mod.make_mask_fn(True, None, None)
+    cross_mask = attn_mod.make_mask_fn(False, None, None)
+
+    def body(carry, xs):
+        lp, sk, sv, ck, cv = xs
+        h = apply_norm(cfg.norm_kind, carry, lp["norm1"])
+        a, st = attn_mod.gqa_decode(cfg, lp["self"], h,
+                                    {"k": sk, "v": sv, "len": pos}, mask_fn,
+                                    rope=False)
+        x = carry + a
+        hx = apply_norm(cfg.norm_kind, x, lp["norm_x"])
+        qx = attn_mod.gqa_project(cfg, lp["cross"], hx,
+                                  jnp.zeros((B, 1), jnp.int32), rope=False)[0]
+        o = attn_mod.decode_attention(qx, ck, cv, jnp.int32(cfg.enc_seq),
+                                      cross_mask)
+        o = o.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+        x = x + o @ lp["cross"]["wo"].astype(x.dtype)
+        h2 = apply_norm(cfg.norm_kind, x, lp["norm2"])
+        x = x + mlp_mod.mlp_apply("gelu", lp["mlp"], h2)
+        return x, (st["k"], st["v"])
+
+    x, (nk, nv) = scan_layers(
+        body, x, (params["dec_blocks"], cache["self_k"], cache["self_v"],
+                  cache["cross_k"], cache["cross_v"]),
+        unroll=cfg.unroll_layers)
+    new_cache = dict(cache, self_k=nk, self_v=nv, len=pos + 1)
+    x = apply_norm(cfg.norm_kind, x, params["dec_norm"])
+    return unembed(cfg, params, x), new_cache

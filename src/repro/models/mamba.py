@@ -1,0 +1,99 @@
+"""Selective SSM (Mamba) head used by the hymba hybrid block.
+
+Classic S6: input-dependent (Delta, B, C) with diagonal A; recurrence
+
+    h_t = exp(Delta_t * A) h_{t-1} + Delta_t * B_t * x_t      (per channel)
+    y_t = C_t . h_t + D * x_t
+
+State: [B, d_inner, d_state] (d_state = cfg.ssm_state, e.g. 16) — O(1) in
+sequence length, which is what lets hymba run the long_500k decode cell.
+The short depthwise conv of the reference implementation is kept (k=4).
+Training uses lax.scan over time (hymba's d_state=16 keeps the scan's
+elementwise work negligible next to the projections).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+
+def mamba_specs(cfg, stacked: int | None, d_in: int, d_inner: int) -> dict:
+    lead = (stacked,) if stacked else ()
+    lx = ("layers",) if stacked else ()
+    Ns, Kc = cfg.ssm_state, cfg.ssm_conv
+    dt_rank = max(d_in // 16, 1)
+    return {
+        "w_in": ParamSpec(lead + (d_in, 2 * d_inner), lx + ("embed", "qkv")),
+        "conv_w": ParamSpec(lead + (Kc, d_inner), lx + (None, "qkv"), scale=0.5),
+        "conv_b": ParamSpec(lead + (d_inner,), lx + ("qkv",), init="zeros"),
+        "w_bdt": ParamSpec(lead + (d_inner, 2 * Ns + dt_rank), lx + ("qkv", None)),
+        "w_dt": ParamSpec(lead + (dt_rank, d_inner), lx + (None, "qkv"), scale=0.1),
+        "dt_bias": ParamSpec(lead + (d_inner,), lx + ("qkv",), init="zeros"),
+        "a_log": ParamSpec(lead + (d_inner, Ns), lx + ("qkv", None), init="zeros"),
+        "d_skip": ParamSpec(lead + (d_inner,), lx + ("qkv",), init="ones"),
+        "w_out": ParamSpec(lead + (d_inner, d_in), lx + ("qkv", "embed")),
+    }
+
+
+def _conv1d(x, w, b, cache=None):
+    """Depthwise causal conv. x:[B,S,Di], w:[K,Di]. cache:[B,K-1,Di] or None."""
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    new_cache = xp[:, -(K - 1):] if K > 1 else pad
+    return out + b.astype(x.dtype), new_cache
+
+
+def _ssm_scan(u, dt, B_in, C_in, a_log, d_skip, state):
+    """u/dt:[B,S,Di]; B_in/C_in:[B,S,Ns]; state:[B,Di,Ns] -> (y, state)."""
+    A = -jnp.exp(a_log.astype(jnp.float32))          # (Di,Ns), negative
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp                    # (B,Di),(B,Di),(B,Ns),(B,Ns)
+        dA = jnp.exp(dt_t[..., None] * A[None])      # (B,Di,Ns)
+        dBu = (dt_t * u_t)[..., None] * b_t[:, None, :]
+        h = dA * h + dBu
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = jax.tree.map(lambda t: t.transpose(1, 0, 2).astype(jnp.float32),
+                      (u, dt, B_in, C_in))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    y = ys.transpose(1, 0, 2) + u.astype(jnp.float32) * d_skip.astype(jnp.float32)
+    return y, state
+
+
+def mamba_apply(cfg, p, x, *, cache=None, return_cache: bool = False):
+    """x:[B,S,D] -> (y:[B,S,D], cache'). cache={"h","conv"} or None (train).
+
+    return_cache=True with cache=None returns a fresh cache from a
+    full-sequence run (the prefill path)."""
+    B, S, D = x.shape
+    d_inner = p["w_in"].shape[-1] // 2
+    Ns = cfg.ssm_state
+
+    xz = x @ p["w_in"].astype(x.dtype)
+    u, z = jnp.split(xz, 2, axis=-1)
+    conv_cache = None if cache is None else cache["conv"]
+    u, new_conv = _conv1d(u, p["conv_w"], p["conv_b"], conv_cache)
+    u = jax.nn.silu(u)
+
+    bdt = u @ p["w_bdt"].astype(x.dtype)
+    B_in, C_in, dt_low = jnp.split(bdt, [Ns, 2 * Ns], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["w_dt"].astype(x.dtype)
+                         + p["dt_bias"].astype(x.dtype))
+
+    state = (jnp.zeros((B, d_inner, Ns), jnp.float32) if cache is None
+             else cache["h"])
+    y, state = _ssm_scan(u, dt, B_in, C_in, p["a_log"], p["d_skip"], state)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["w_out"].astype(x.dtype)
+    if cache is None and not return_cache:
+        return out, None
+    return out, {"h": state, "conv": new_conv.astype(x.dtype)}

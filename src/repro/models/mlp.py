@@ -1,0 +1,64 @@
+"""Dense MLP variants: SwiGLU (llama-style), GELU (whisper), GeGLU (gemma),
+and the RWKV channel-mix."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+
+def mlp_specs(kind: str, d: int, f: int, stacked: int | None) -> dict:
+    lead = (stacked,) if stacked else ()
+    lx = ("layers",) if stacked else ()
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": ParamSpec(lead + (d, f), lx + ("embed", "mlp")),
+            "w_up": ParamSpec(lead + (d, f), lx + ("embed", "mlp")),
+            "w_down": ParamSpec(lead + (f, d), lx + ("mlp", "embed")),
+        }
+    if kind == "gelu":
+        return {
+            "w_up": ParamSpec(lead + (d, f), lx + ("embed", "mlp")),
+            "b_up": ParamSpec(lead + (f,), lx + ("mlp",), init="zeros"),
+            "w_down": ParamSpec(lead + (f, d), lx + ("mlp", "embed")),
+            "b_down": ParamSpec(lead + (d,), lx + ("embed",), init="zeros"),
+        }
+    if kind == "rwkv_cmix":
+        return {
+            "mu_k": ParamSpec(lead + (d,), lx + ("embed",), init="ones"),
+            "w_k": ParamSpec(lead + (d, f), lx + ("embed", "mlp")),
+            "w_v": ParamSpec(lead + (f, d), lx + ("mlp", "embed")),
+            "mu_r": ParamSpec(lead + (d,), lx + ("embed",), init="ones"),
+            "w_r": ParamSpec(lead + (d, d), lx + ("embed", "embed_out")),
+        }
+    raise ValueError(kind)
+
+
+def mlp_apply(kind: str, p: dict, x: jax.Array,
+              x_prev: jax.Array | None = None) -> jax.Array:
+    """x: [B,S,D]. x_prev: shifted sequence for rwkv channel mix."""
+    if kind == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+                * (x @ p["w_up"].astype(x.dtype))) @ p["w_down"].astype(x.dtype)
+    if kind == "geglu":
+        return (jax.nn.gelu(x @ p["w_gate"].astype(x.dtype), approximate=True)
+                * (x @ p["w_up"].astype(x.dtype))) @ p["w_down"].astype(x.dtype)
+    if kind == "gelu":
+        h = jax.nn.gelu(x @ p["w_up"].astype(x.dtype)
+                        + p["b_up"].astype(x.dtype), approximate=True)
+        return h @ p["w_down"].astype(x.dtype) + p["b_down"].astype(x.dtype)
+    if kind == "rwkv_cmix":
+        if x_prev is None:
+            x_prev = token_shift(x)
+        xk = x + (x_prev - x) * p["mu_k"].astype(x.dtype)
+        xr = x + (x_prev - x) * p["mu_r"].astype(x.dtype)
+        kk = jnp.square(jax.nn.relu(xk @ p["w_k"].astype(x.dtype)))
+        return jax.nn.sigmoid(xr @ p["w_r"].astype(x.dtype)) * (
+            kk @ p["w_v"].astype(x.dtype))
+    raise ValueError(kind)
+
+
+def token_shift(x: jax.Array) -> jax.Array:
+    """RWKV token shift: x_{t-1} with zero at t=0. x: [B,S,D]."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]

@@ -1,0 +1,134 @@
+"""Unified model API: one façade over every family in the zoo.
+
+``Model.from_config(cfg)`` gives: param specs/init/axes, the training
+loss, prefill and decode entry points, cache constructors, and
+``input_specs(shape)`` — ShapeDtypeStruct stand-ins for every input of
+every assigned (arch x shape) cell, which is what the multi-pod dry-run
+lowers against (no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common, encdec, transformer
+
+
+class ShapeCell(NamedTuple):
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPE_CELLS = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+
+    @staticmethod
+    def from_config(cfg) -> "Model":
+        return Model(cfg)
+
+    # ---------------- params ----------------
+    def param_specs(self):
+        if self.cfg.family == "audio":
+            specs = encdec.encdec_param_specs(self.cfg)
+        else:
+            specs = transformer.lm_param_specs(self.cfg)
+        if self.cfg.param_dtype == "bfloat16":
+            specs = jax.tree.map(
+                lambda sp: sp._replace(dtype=jnp.bfloat16)
+                if sp.dtype == jnp.float32 else sp,
+                specs, is_leaf=lambda x: isinstance(x, common.ParamSpec))
+        return specs
+
+    def init_params(self, key):
+        return common.init_params(key, self.param_specs())
+
+    def abstract_params(self):
+        return common.abstract_params(self.param_specs())
+
+    def param_axes(self):
+        return common.param_axes(self.param_specs())
+
+    # ---------------- training ----------------
+    def loss(self, params, batch):
+        if self.cfg.family == "audio":
+            return encdec.encdec_loss(self.cfg, params, batch)
+        return transformer.lm_loss(self.cfg, params, batch)
+
+    # ---------------- serving ----------------
+    def prefill(self, params, batch, max_len: int):
+        if self.cfg.family == "audio":
+            return encdec.prefill(self.cfg, params, batch["frames"],
+                                  batch["tokens"][:, :1], max_len)
+        return transformer.prefill(self.cfg, params, batch["tokens"], max_len,
+                                   extra_embeds=batch.get("patch_embeds"))
+
+    def decode_step(self, params, tokens, cache):
+        if self.cfg.family == "audio":
+            return encdec.decode_step(self.cfg, params, tokens, cache)
+        return transformer.decode_step(self.cfg, params, tokens, cache)
+
+    def init_cache(self, batch: int, max_len: int):
+        if self.cfg.family == "audio":
+            return encdec.init_cache(self.cfg, batch, max_len)
+        return transformer.init_cache(self.cfg, batch, max_len)
+
+    def cache_axes(self):
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return encdec.encdec_cache_axes(cfg)
+        one = transformer.cache_axes(cfg)
+        n_dense = cfg.first_dense_layers if cfg.n_experts else 0
+        stacked = {k: ("layers",) + v for k, v in one.items()}
+        out = {"blocks": stacked, "len": ()}
+        if n_dense:
+            out["dense_blocks"] = stacked
+        return out
+
+    # ---------------- dry-run input specs ----------------
+    def input_specs(self, shape_name: str) -> dict:
+        """ShapeDtypeStruct stand-ins for the given assigned shape cell."""
+        cfg = self.cfg
+        cell = SHAPE_CELLS[shape_name]
+        B, S = cell.global_batch, cell.seq_len
+        dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+        f = lambda *sh: jax.ShapeDtypeStruct(sh, dt)
+
+        if cell.kind == "train":
+            if cfg.family == "audio":
+                return {"tokens": tok(B, S), "targets": tok(B, S),
+                        "loss_mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+                        "frames": f(B, cfg.enc_seq, cfg.d_model)}
+            batch = {"tokens": tok(B, S), "targets": tok(B, S),
+                     "loss_mask": jax.ShapeDtypeStruct((B, S), jnp.float32)}
+            if cfg.vis_prefix_len:
+                st = S - cfg.vis_prefix_len  # total positions == seq_len
+                batch.update(tokens=tok(B, st), targets=tok(B, st),
+                             loss_mask=jax.ShapeDtypeStruct((B, st), jnp.float32),
+                             patch_embeds=f(B, cfg.vis_prefix_len, cfg.d_model))
+            return batch
+        if cell.kind == "prefill":
+            if cfg.family == "audio":
+                return {"tokens": tok(B, S), "frames": f(B, cfg.enc_seq, cfg.d_model)}
+            batch = {"tokens": tok(B, S)}
+            if cfg.vis_prefix_len:
+                batch = {"tokens": tok(B, S - cfg.vis_prefix_len),
+                         "patch_embeds": f(B, cfg.vis_prefix_len, cfg.d_model)}
+            return batch
+        # decode: one new token against a seq_len cache
+        cache = jax.eval_shape(lambda: self.init_cache(B, S))
+        return {"tokens": tok(B, 1), "cache": cache}

@@ -1,0 +1,171 @@
+"""RWKV-6 "Finch" time-mix: linear attention with data-dependent decay.
+
+State per head is an (N x N) outer-product memory updated per token:
+
+    S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] * v_t[j]
+    y_t[j]   = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] * k_t[i] * v_t[j])
+
+with per-channel, data-dependent decay w_t = exp(-exp(w_raw_t)) produced
+by a LoRA on the token-shifted input (the Finch contribution).
+
+Two execution modes (cfg.rwkv_mode):
+  * "recurrent": exact lax.scan over time — O(1) state, the decode path
+    and the correctness oracle.
+  * "chunked": intra-chunk pairwise matmuls + inter-chunk state passing —
+    the TPU/MXU path.  All exponents are differences of the in-chunk
+    cumulative log-decay, with log-decay clamped to [-2.5, -1e-4] and
+    chunk <= 32 so every factor stays inside fp32 range (|L| span <= 80).
+    Validated against "recurrent" in tests to 1e-4.
+
+long_500k runnability comes from here: decode state is O(H*N^2), not O(S).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mlp as mlp_mod
+from repro.models.common import ParamSpec, rms_norm
+
+LW_MIN, LW_MAX = -2.5, -1e-4
+DECAY_LORA = 64
+
+
+def rwkv_specs(cfg, stacked: int | None) -> dict:
+    lead = (stacked,) if stacked else ()
+    lx = ("layers",) if stacked else ()
+    D = cfg.d_model
+    H = D // cfg.rwkv_head_dim
+    N = cfg.rwkv_head_dim
+    return {
+        "mu": ParamSpec(lead + (5, D), lx + (None, "embed"), init="ones"),
+        "w_base": ParamSpec(lead + (D,), lx + ("embed",), init="zeros"),
+        "w_lora_a": ParamSpec(lead + (D, DECAY_LORA), lx + ("embed", None), scale=0.1),
+        "w_lora_b": ParamSpec(lead + (DECAY_LORA, D), lx + (None, "embed"), scale=0.1),
+        "wr": ParamSpec(lead + (D, D), lx + ("embed", "qkv")),
+        "wk": ParamSpec(lead + (D, D), lx + ("embed", "qkv")),
+        "wv": ParamSpec(lead + (D, D), lx + ("embed", "qkv")),
+        "wg": ParamSpec(lead + (D, D), lx + ("embed", "qkv")),
+        "u": ParamSpec(lead + (H, N), lx + ("heads", None), init="zeros"),
+        "ln_x": ParamSpec(lead + (D,), lx + ("embed",), init="zeros"),
+        "wo": ParamSpec(lead + (D, D), lx + ("qkv", "embed")),
+    }
+
+
+def _rkvwg(cfg, p, x, x_prev):
+    """Token-shift lerp + projections. x:[B,S,D] -> r,k,v,g:[B,H,S,N], lw:[B,H,S,N]."""
+    B, S, D = x.shape
+    H, N = D // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    mu = p["mu"].astype(x.dtype)  # (5,D)
+    xs = [x + (x_prev - x) * mu[i] for i in range(5)]
+    xr, xk, xv, xw, xg = xs
+    r = xr @ p["wr"].astype(x.dtype)
+    k = xk @ p["wk"].astype(x.dtype)
+    v = xv @ p["wv"].astype(x.dtype)
+    g = xg @ p["wg"].astype(x.dtype)
+    w_raw = (p["w_base"].astype(jnp.float32)
+             + jnp.tanh(xw.astype(jnp.float32) @ p["w_lora_a"].astype(jnp.float32))
+             @ p["w_lora_b"].astype(jnp.float32))
+    lw = -jnp.exp(w_raw)                       # log decay, negative
+    lw = jnp.clip(lw, LW_MIN, LW_MAX)
+
+    def heads(t):
+        return t.reshape(B, S, H, N).transpose(0, 2, 1, 3)
+
+    return heads(r), heads(k), heads(v), g, heads(lw)
+
+
+def wkv_recurrent(r, k, v, lw, u, state):
+    """Exact recurrence. r/k/v/lw: [B,H,S,N]; u: [H,N]; state: [B,H,N,N].
+
+    Returns (y [B,H,S,N], new_state)."""
+    def step(S_c, inp):
+        r_t, k_t, v_t, lw_t = inp  # each (B,H,N)
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,N,N)
+        y = jnp.einsum("bhi,bhij->bhj", r_t,
+                       S_c + u[None, :, :, None] * kv)
+        S_n = jnp.exp(lw_t)[..., :, None] * S_c + kv
+        return S_n, y
+
+    xs = jax.tree.map(lambda t: t.transpose(2, 0, 1, 3).astype(jnp.float32),
+                      (r, k, v, lw))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), xs)
+    return ys.transpose(1, 2, 0, 3), state
+
+
+def wkv_chunked(r, k, v, lw, u, state, chunk: int):
+    """Chunked-parallel WKV6; math in the module docstring.
+
+    Intra-chunk pair matrix A[t,j] = sum_i r_t[i] k_j[i] e^{L[t-1,i]-L[j,i]}
+    (strictly j<t), diagonal handled by the bonus term; inter-chunk via the
+    decayed state.  All in fp32.
+    """
+    B, H, S, N = r.shape
+    C = chunk
+    assert S % C == 0, (S, C)
+    nc = S // C
+    f32 = jnp.float32
+
+    def to_chunks(t):
+        return t.reshape(B, H, nc, C, N).transpose(2, 0, 1, 3, 4).astype(f32)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, lw))
+
+    def chunk_step(S_c, inp):
+        rr, kk, vv, ll = inp                      # (B,H,C,N)
+        L = jnp.cumsum(ll, axis=2)                # inclusive cumulative log-decay
+        L_prev = L - ll                           # L_{t-1} (exclusive)
+        L_last = L[:, :, -1:, :]                  # (B,H,1,N)
+
+        r_in = rr * jnp.exp(L_prev)               # bounded <= |r|
+        k_out = kk * jnp.exp(L_last - L)          # bounded <= |k|
+        k_in = kk * jnp.exp(-L)                   # up to e^{80}: fp32-safe
+        # pairwise scores, strictly lower-triangular
+        A = jnp.einsum("bhti,bhji->bhtj", r_in, k_in)
+        tri = jnp.tril(jnp.ones((C, C), bool), k=-1)
+        A = jnp.where(tri[None, None], A, 0.0)
+        y_intra = jnp.einsum("bhtj,bhjn->bhtn", A, vv)
+        # diagonal (bonus) term: (sum_i r_t[i] u[i] k_t[i]) * v_t
+        y_diag = (rr * u[None, :, None, :] * kk).sum(-1, keepdims=True) * vv
+        y_inter = jnp.einsum("bhti,bhin->bhtn", r_in, S_c)
+        S_n = jnp.exp(L_last)[..., 0, :][..., :, None] * S_c + jnp.einsum(
+            "bhti,bhtn->bhin", k_out, vv)
+        return S_n, y_intra + y_diag + y_inter
+
+    state, ys = jax.lax.scan(jax.remat(chunk_step), state.astype(f32),
+                             (rc, kc, vc, lwc))
+    y = ys.transpose(1, 2, 0, 3, 4).reshape(B, H, S, N)
+    return y, state
+
+
+def rwkv_apply(cfg, p, x, *, x_prev=None, state=None):
+    """Full-sequence time-mix. x:[B,S,D] -> (y [B,S,D], final_state)."""
+    B, S, D = x.shape
+    H, N = D // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    if x_prev is None:
+        x_prev = mlp_mod.token_shift(x)
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+    r, k, v, g, lw = _rkvwg(cfg, p, x, x_prev)
+    u = p["u"].astype(jnp.float32)
+    if cfg.rwkv_mode == "chunked" and S % cfg.rwkv_chunk == 0 and S > 1:
+        y, state = wkv_chunked(r, k, v, lw, u, state, cfg.rwkv_chunk)
+    else:
+        y, state = wkv_recurrent(r, k, v, lw, u, state)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, D)
+    y = rms_norm(y.astype(x.dtype), p["ln_x"])
+    y = y * jax.nn.silu(g)
+    return y @ p["wo"].astype(x.dtype), state
+
+
+def rwkv_decode(cfg, p, x, cache: dict):
+    """Single-token decode: O(1) state, no KV growth (the 500k story).
+
+    cache: {"state": [B,H,N,N] f32, "x_prev": [B,1,D], "cx_prev": [B,1,D]}
+    (cx_prev is consumed by the channel-mix in transformer.py).
+    """
+    y, state = rwkv_apply(cfg, p, x, x_prev=cache["x_prev"], state=cache["state"])
+    new_cache = dict(cache)
+    new_cache["state"] = state
+    new_cache["x_prev"] = x
+    return y, new_cache

@@ -1,0 +1,535 @@
+"""Decoder-only LM assembly: one scan-over-layers covering every family.
+
+Block kinds:  attn (GQA/MQA/MLA, optional SWA / per-layer global mix),
+rwkv (Finch time-mix + channel-mix), hybrid (parallel attn + mamba heads,
+hymba-style).  MLP kinds: dense (swiglu/gelu/geglu), MoE (fine-grained
+shared+routed), rwkv channel-mix.
+
+Layers are stored stacked (leading "layers" dim) and consumed by
+``lax.scan`` with per-layer ``jax.remat`` — HLO size, compile time and
+activation memory are all depth-independent.  `first_dense_layers`
+(deepseek) live in a second, smaller stack so both scans stay homogeneous.
+
+Three entry points per model:
+  forward()      full-seq logits (training, and the prefill_32k cells)
+  prefill()      forward + cache construction (serving)
+  decode_step()  one token with cache (the decode_32k / long_500k cells)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import logical_constraint
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.common import (ParamSpec, apply_norm, norm_spec,
+                                 scan_layers, softcap)
+
+GLOBAL_WINDOW = jnp.int32(2**30)  # "no window" sentinel for dynamic-window archs
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+def _mix_specs(cfg, L: int) -> dict:
+    if cfg.block_kind == "rwkv":
+        return rwkv_mod.rwkv_specs(cfg, L)
+    if cfg.block_kind == "hybrid":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        return {
+            "attn": attn_mod.gqa_specs(cfg, L),
+            "mamba": mamba_mod.mamba_specs(cfg, L, cfg.d_model, d_inner),
+            "norm_attn": norm_spec(cfg.norm_kind, cfg.d_model, L),
+            "norm_mamba": norm_spec(cfg.norm_kind, cfg.d_model, L),
+        }
+    if cfg.attn_kind == "mla":
+        return attn_mod.mla_specs(cfg, L)
+    return attn_mod.gqa_specs(cfg, L)
+
+
+def _mlp_specs(cfg, L: int, dense: bool) -> dict:
+    if cfg.n_experts and not dense:
+        return moe_mod.moe_specs(cfg, L)
+    kind = cfg.mlp_kind if cfg.mlp_kind != "rwkv_cmix" else "rwkv_cmix"
+    d_ff = cfg.d_ff
+    return mlp_mod.mlp_specs(kind, cfg.d_model, d_ff, L)
+
+
+def _block_specs(cfg, L: int, dense_mlp: bool) -> dict:
+    return {
+        "norm1": norm_spec(cfg.norm_kind, cfg.d_model, L),
+        "mix": _mix_specs(cfg, L),
+        "norm2": norm_spec(cfg.norm_kind, cfg.d_model, L),
+        "mlp": _mlp_specs(cfg, L, dense_mlp),
+    }
+
+
+def lm_param_specs(cfg) -> dict:
+    n_dense = cfg.first_dense_layers if cfg.n_experts else 0
+    n_stack = cfg.n_layers - n_dense
+    specs = {
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                           init="embed"),
+        "blocks": _block_specs(cfg, n_stack, dense_mlp=False),
+        "final_norm": norm_spec(cfg.norm_kind, cfg.d_model),
+    }
+    if n_dense:
+        specs["dense_blocks"] = _block_specs(cfg, n_dense, dense_mlp=True)
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                     ("embed", "vocab"))
+    return specs
+
+
+def layer_windows(cfg) -> Optional[jax.Array]:
+    """Per-layer attention windows, or None if attention is uniform.
+
+    hymba: SWA everywhere except `global_attn_layers` (first/mid/last).
+    """
+    if not cfg.global_attn_layers:
+        return None
+    w = [GLOBAL_WINDOW if i in cfg.global_attn_layers else cfg.sliding_window
+         for i in range(cfg.n_layers)]
+    return jnp.asarray(w, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# One block (full-sequence path)
+# ---------------------------------------------------------------------------
+
+def _static_skip_info(cfg, causal, window, prefix_len):
+    """Static mask geometry for causal block-skipping (None = no skip)."""
+    if (not getattr(cfg, "attn_block_skip", True) or not causal
+            or prefix_len is not None
+            or not (window is None or isinstance(window, int))):
+        return None
+    return (True, window)
+
+
+def _mix_apply(cfg, lp, h, positions, window, prefix_len):
+    """Returns (mix_out, aux_state_or_None)."""
+    causal = cfg.is_causal_lm
+    if cfg.block_kind == "rwkv":
+        y, state = rwkv_mod.rwkv_apply(cfg, lp, h)
+        return y, state
+    mask_fn = attn_mod.make_mask_fn(causal, window, prefix_len)
+    skip = _static_skip_info(cfg, causal, window, prefix_len)
+    if cfg.block_kind == "hybrid":
+        a = attn_mod.gqa_apply(cfg, lp["attn"], h, positions, mask_fn,
+                               skip_info=skip)
+        m, _ = mamba_mod.mamba_apply(cfg, lp["mamba"], h)
+        a = apply_norm(cfg.norm_kind, a, lp["norm_attn"])
+        m = apply_norm(cfg.norm_kind, m, lp["norm_mamba"])
+        return 0.5 * (a + m), None
+    if cfg.attn_kind == "mla":
+        return attn_mod.mla_apply(cfg, lp, h, positions, mask_fn,
+                                  skip_info=skip), None
+    return attn_mod.gqa_apply(cfg, lp, h, positions, mask_fn,
+                              skip_info=skip), None
+
+
+def _mlp_apply(cfg, lp, h, dense_mlp: bool):
+    if cfg.n_experts and not dense_mlp:
+        return moe_mod.moe_apply(cfg, lp, h)
+    if cfg.mlp_kind == "rwkv_cmix":
+        return mlp_mod.mlp_apply("rwkv_cmix", lp, h), {}
+    return mlp_mod.mlp_apply(cfg.mlp_kind, lp, h), {}
+
+
+def block_apply(cfg, lp, x, positions, window, prefix_len, dense_mlp=False):
+    x = logical_constraint(x, ("batch", "seq", None))
+    h = apply_norm(cfg.norm_kind, x, lp["norm1"])
+    mix, _ = _mix_apply(cfg, lp["mix"], h, positions, window, prefix_len)
+    x = x + mix
+    h2 = apply_norm(cfg.norm_kind, x, lp["norm2"])
+    out, metrics = _mlp_apply(cfg, lp["mlp"], h2, dense_mlp)
+    return x + out, metrics
+
+
+def _scan_blocks(cfg, blocks, x, positions, prefix_len, windows, dense_mlp):
+    """scan over stacked layer params with remat."""
+    def body(carry, xs):
+        lp, window = xs
+        y, metrics = block_apply(cfg, lp, carry, positions, window,
+                                 prefix_len, dense_mlp)
+        return y, metrics
+
+    n_layers = jax.tree.leaves(blocks)[0].shape[0]
+    if windows is None:
+        win_xs = jnp.full((n_layers,), -1, jnp.int32)  # ignored sentinel
+
+        def body_nw(carry, xs):
+            lp, _ = xs
+            w = cfg.sliding_window  # static (None or int)
+            y, metrics = block_apply(cfg, lp, carry, positions, w,
+                                     prefix_len, dense_mlp)
+            return y, metrics
+        fn = body_nw
+    else:
+        win_xs = windows
+        fn = body
+    if cfg.remat:
+        fn = jax.remat(fn, prevent_cse=False)
+    x, metrics = scan_layers(fn, x, (blocks, win_xs),
+                             unroll=cfg.unroll_layers)
+    return x, jax.tree.map(jnp.mean, metrics)
+
+
+# ---------------------------------------------------------------------------
+# Full forward (training / prefill_32k lowering)
+# ---------------------------------------------------------------------------
+
+def embed_tokens(cfg, params, tokens):
+    x = params["embed"].astype(_adtype(cfg))[tokens]
+    if getattr(cfg, "scale_embed", False):
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _adtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def unembed(cfg, params, x):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].astype(x.dtype).T
+    else:
+        logits = x @ params["lm_head"].astype(x.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    return logical_constraint(logits, ("batch", "seq_out", "vocab"))
+
+
+def forward_hidden(cfg, params, tokens, *, extra_embeds=None):
+    """tokens -> final-norm hidden states [B,S,D] (+ block metrics)."""
+    x = embed_tokens(cfg, params, tokens)
+    prefix_len = None
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        prefix_len = extra_embeds.shape[1]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    windows = layer_windows(cfg)
+
+    metrics = {}
+    if "dense_blocks" in params:
+        x, m0 = _scan_blocks(cfg, params["dense_blocks"], x, positions,
+                             prefix_len, None, dense_mlp=True)
+        metrics.update(m0)
+    x, m1 = _scan_blocks(cfg, params["blocks"], x, positions, prefix_len,
+                         windows, dense_mlp=False)
+    metrics.update(m1)
+    x = apply_norm(cfg.norm_kind, x, params["final_norm"])
+    return x, metrics
+
+
+def forward(cfg, params, tokens, *, extra_embeds=None):
+    """tokens:[B,S_text] (+ optional [B,P,D] prefix embeds) -> logits [B,S,V]."""
+    x, metrics = forward_hidden(cfg, params, tokens,
+                                extra_embeds=extra_embeds)
+    return unembed(cfg, params, x), metrics
+
+
+def blockwise_nll(cfg, params, x, targets):
+    """Streaming cross-entropy: never materialises the [B,S,V] logits.
+
+    Online logsumexp over vocab chunks of size cfg.ce_block — the memory
+    -bound hillclimb lever for small-d / huge-vocab archs where the CE
+    chain dominates HBM traffic.  The chunk loop is a remat'd scan, so
+    backward recomputes each chunk's logits instead of storing them.
+    """
+    B, S, D = x.shape
+    V, block = cfg.vocab_size, cfg.ce_block
+    pad = -V % block
+    nblk = (V + pad) // block
+    if cfg.tie_embeddings:
+        W = params["embed"].astype(x.dtype).T       # (D, V)
+    else:
+        W = params["lm_head"].astype(x.dtype)
+    W = jnp.pad(W, ((0, 0), (0, pad)))
+    Wc = W.reshape(D, nblk, block).transpose(1, 0, 2)  # (nblk, D, block)
+
+    def body(carry, inp):
+        m, s, tgt = carry
+        i, Wb = inp
+        logits = (x @ Wb).astype(jnp.float32)       # (B, S, block)
+        col_ok = i * block + jnp.arange(block) < V
+        logits = jnp.where(col_ok, logits, -1e30)
+        logits = softcap(logits, cfg.logit_softcap)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        s = s * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[..., None]), axis=-1)
+        loc = targets - i * block
+        hit = (loc >= 0) & (loc < block)
+        tgt_l = jnp.take_along_axis(
+            logits, jnp.clip(loc, 0, block - 1)[..., None], axis=-1)[..., 0]
+        tgt = jnp.where(hit, tgt_l, tgt)
+        return (m_new, s, tgt), None
+
+    init = (jnp.full((B, S), -1e30, jnp.float32),
+            jnp.zeros((B, S), jnp.float32),
+            jnp.full((B, S), -1e30, jnp.float32))
+    (m, s, tgt), _ = jax.lax.scan(jax.remat(body), init,
+                                  (jnp.arange(nblk), Wc))
+    return jnp.log(jnp.maximum(s, 1e-30)) + m - tgt
+
+
+def lm_loss(cfg, params, batch):
+    """batch: {tokens, targets, loss_mask, [patch_embeds]} -> (loss, metrics)."""
+    extra = batch.get("patch_embeds")
+    targets = batch["targets"]
+    x, metrics = forward_hidden(cfg, params, batch["tokens"],
+                                extra_embeds=extra)
+    if extra is not None:  # hidden over [prefix + text]; train on text only
+        x = x[:, extra.shape[1]:]
+    if cfg.ce_block:
+        nll = blockwise_nll(cfg, params, x, targets)
+    else:
+        logits = unembed(cfg, params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = batch["loss_mask"].astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    if "moe_lb_loss" in metrics:
+        loss = loss + 0.01 * metrics["moe_lb_loss"] + 1e-3 * metrics["moe_z_loss"]
+    metrics = dict(metrics, nll=loss)
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# KV / state caches
+# ---------------------------------------------------------------------------
+
+def _layer_cache_struct(cfg, batch: int, max_len: int, dtype):
+    """Shapes for ONE layer's cache (leading 'layers' dim added by caller)."""
+    H = cfg.d_model // cfg.rwkv_head_dim if cfg.block_kind == "rwkv" else 0
+    if cfg.block_kind == "rwkv":
+        N = cfg.rwkv_head_dim
+        return {
+            "state": jnp.zeros((batch, H, N, N), jnp.float32),
+            "x_prev": jnp.zeros((batch, 1, cfg.d_model), dtype),
+            "cx_prev": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        }
+    if cfg.block_kind == "hybrid":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        return {
+            "k": jnp.zeros((batch, cfg.n_kv_heads, max_len, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, cfg.n_kv_heads, max_len, cfg.head_dim), dtype),
+            "mamba_h": jnp.zeros((batch, d_inner, cfg.ssm_state), jnp.float32),
+            "mamba_conv": jnp.zeros((batch, cfg.ssm_conv - 1, d_inner), dtype),
+        }
+    if cfg.attn_kind == "mla":
+        lat = cfg.kv_lora_rank + cfg.qk_rope_dim
+        return {"latent": jnp.zeros((batch, max_len, lat), dtype)}
+    return {
+        "k": jnp.zeros((batch, cfg.n_kv_heads, max_len, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, cfg.n_kv_heads, max_len, cfg.head_dim), dtype),
+    }
+
+
+def cache_axes(cfg) -> dict:
+    """Logical axes for each cache leaf (leading 'layers' added by caller).
+
+    KV sequence gets the 'kv_seq' logical axis -> split-KV decode when the
+    serve rules map it to 'model'."""
+    if cfg.block_kind == "rwkv":
+        return {"state": ("batch", "heads", None, None),
+                "x_prev": ("batch", None, "embed_act"),
+                "cx_prev": ("batch", None, "embed_act")}
+    if cfg.block_kind == "hybrid":
+        return {"k": ("batch", None, "kv_seq", None),
+                "v": ("batch", None, "kv_seq", None),
+                "mamba_h": ("batch", "qkv", None),
+                "mamba_conv": ("batch", None, "qkv")}
+    if cfg.attn_kind == "mla":
+        return {"latent": ("batch", "kv_seq", None)}
+    return {"k": ("batch", None, "kv_seq", None),
+            "v": ("batch", None, "kv_seq", None)}
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    """Stacked (n_layers-leading) cache pytree + shared length scalar."""
+    dtype = _adtype(cfg)
+    n_dense = cfg.first_dense_layers if cfg.n_experts else 0
+    one = _layer_cache_struct(cfg, batch, max_len, dtype)
+
+    def stack(n):
+        return jax.tree.map(lambda t: jnp.broadcast_to(t, (n,) + t.shape), one)
+
+    cache = {"blocks": stack(cfg.n_layers - n_dense), "len": jnp.int32(0)}
+    if n_dense:
+        cache["dense_blocks"] = stack(n_dense)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token) and prefill
+# ---------------------------------------------------------------------------
+
+def _mix_decode(cfg, lp, h, cache_l, pos, window, prefix_len):
+    """h:[B,1,D]; cache_l: one layer's cache (+ externally managed 'len')."""
+    causal = True
+    mask_fn = attn_mod.make_mask_fn(causal, window, prefix_len)
+    if cfg.block_kind == "rwkv":
+        y, st = rwkv_mod.rwkv_decode(cfg, lp,  h,
+                                     {"state": cache_l["state"],
+                                      "x_prev": cache_l["x_prev"]})
+        return y, {**cache_l, "state": st["state"], "x_prev": st["x_prev"]}
+    if cfg.block_kind == "hybrid":
+        a, kv = attn_mod.gqa_decode(cfg, lp["attn"], h,
+                                    {"k": cache_l["k"], "v": cache_l["v"],
+                                     "len": pos}, mask_fn)
+        m, mc = mamba_mod.mamba_apply(cfg, lp["mamba"], h,
+                                      cache={"h": cache_l["mamba_h"],
+                                             "conv": cache_l["mamba_conv"]})
+        a = apply_norm(cfg.norm_kind, a, lp["norm_attn"])
+        m = apply_norm(cfg.norm_kind, m, lp["norm_mamba"])
+        return 0.5 * (a + m), {**cache_l, "k": kv["k"], "v": kv["v"],
+                               "mamba_h": mc["h"], "mamba_conv": mc["conv"]}
+    if cfg.attn_kind == "mla":
+        y, st = attn_mod.mla_decode(cfg, lp, h,
+                                    {"latent": cache_l["latent"], "len": pos},
+                                    mask_fn)
+        return y, {**cache_l, "latent": st["latent"]}
+    y, st = attn_mod.gqa_decode(cfg, lp, h, {"k": cache_l["k"],
+                                             "v": cache_l["v"], "len": pos},
+                                mask_fn)
+    return y, {**cache_l, "k": st["k"], "v": st["v"]}
+
+
+def block_decode(cfg, lp, x, cache_l, pos, window, prefix_len, dense_mlp=False):
+    h = apply_norm(cfg.norm_kind, x, lp["norm1"])
+    mix, cache_l = _mix_decode(cfg, lp["mix"], h, cache_l, pos, window, prefix_len)
+    x = x + mix
+    h2 = apply_norm(cfg.norm_kind, x, lp["norm2"])
+    if cfg.block_kind == "rwkv":
+        out = mlp_mod.mlp_apply("rwkv_cmix", lp["mlp"], h2,
+                                x_prev=cache_l["cx_prev"])
+        cache_l = {**cache_l, "cx_prev": h2}
+    else:
+        out, _ = _mlp_apply(cfg, lp["mlp"], h2, dense_mlp)
+    return x + out, cache_l
+
+
+def decode_step(cfg, params, tokens, cache):
+    """tokens:[B,1] -> (logits [B,1,V], cache'). The serve_step lowering."""
+    x = embed_tokens(cfg, params, tokens)
+    pos = cache["len"]
+    windows = layer_windows(cfg)
+
+    def scan_stack(x, blocks, block_cache, dense_mlp):
+        n = jax.tree.leaves(blocks)[0].shape[0]
+        win_xs = windows if windows is not None else jnp.full((n,), -1, jnp.int32)
+
+        def body(carry, xs):
+            lp, cl, w = xs
+            w_arg = w if windows is not None else cfg.sliding_window
+            y, cl2 = block_decode(cfg, lp, carry, cl, pos, w_arg, None,
+                                  dense_mlp)
+            return y, cl2
+
+        return scan_layers(body, x, (blocks, block_cache, win_xs),
+                           unroll=cfg.unroll_layers)
+
+    new_cache = dict(cache)
+    if "dense_blocks" in params:
+        x, nc = scan_stack(x, params["dense_blocks"], cache["dense_blocks"],
+                           dense_mlp=True)
+        new_cache["dense_blocks"] = nc
+    x, nc = scan_stack(x, params["blocks"], cache["blocks"], dense_mlp=False)
+    new_cache["blocks"] = nc
+    new_cache["len"] = pos + 1
+    x = apply_norm(cfg.norm_kind, x, params["final_norm"])
+    return unembed(cfg, params, x), new_cache
+
+
+def _mix_prefill(cfg, lp, h, positions, window, prefix_len, max_len):
+    """Full-seq mix that also returns this layer's cache (padded to max_len)."""
+    causal = cfg.is_causal_lm
+    mask_fn = attn_mod.make_mask_fn(causal, window, prefix_len)
+    S = h.shape[1]
+    pad = max_len - S
+
+    def pad_kv(t):  # [B,H,S,D] -> [B,H,max_len,D]
+        return jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+    if cfg.block_kind == "rwkv":
+        y, state = rwkv_mod.rwkv_apply(cfg, lp, h)
+        return y, {"state": state, "x_prev": h[:, -1:]}
+    skip = _static_skip_info(cfg, causal, window, prefix_len)
+    if cfg.block_kind == "hybrid":
+        a, (k, v) = attn_mod.gqa_apply(cfg, lp["attn"], h, positions, mask_fn,
+                                       return_kv=True, skip_info=skip)
+        m, mc = mamba_mod.mamba_apply(cfg, lp["mamba"], h, return_cache=True)
+        a = apply_norm(cfg.norm_kind, a, lp["norm_attn"])
+        m = apply_norm(cfg.norm_kind, m, lp["norm_mamba"])
+        return 0.5 * (a + m), {"k": pad_kv(k), "v": pad_kv(v),
+                               "mamba_h": mc["h"], "mamba_conv": mc["conv"]}
+    if cfg.attn_kind == "mla":
+        y, lat = attn_mod.mla_apply(cfg, lp, h, positions, mask_fn,
+                                    return_latent=True, skip_info=skip)
+        return y, {"latent": jnp.pad(lat, ((0, 0), (0, pad), (0, 0)))}
+    y, (k, v) = attn_mod.gqa_apply(cfg, lp, h, positions, mask_fn,
+                                   return_kv=True, skip_info=skip)
+    return y, {"k": pad_kv(k), "v": pad_kv(v)}
+
+
+def block_prefill(cfg, lp, x, positions, window, prefix_len, max_len,
+                  dense_mlp=False):
+    h = apply_norm(cfg.norm_kind, x, lp["norm1"])
+    mix, cache_l = _mix_prefill(cfg, lp["mix"], h, positions, window,
+                                prefix_len, max_len)
+    x = x + mix
+    h2 = apply_norm(cfg.norm_kind, x, lp["norm2"])
+    if cfg.block_kind == "rwkv":
+        out = mlp_mod.mlp_apply("rwkv_cmix", lp["mlp"], h2)
+        cache_l["cx_prev"] = h2[:, -1:]
+    else:
+        out, _ = _mlp_apply(cfg, lp["mlp"], h2, dense_mlp)
+    return x + out, cache_l
+
+
+def prefill(cfg, params, tokens, max_len: int, *, extra_embeds=None):
+    """Prompt -> (logits for the last position [B,V], full cache).
+
+    This is the lowering target of the prefill_32k cells."""
+    x = embed_tokens(cfg, params, tokens)
+    prefix_len = None
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        prefix_len = extra_embeds.shape[1]
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    windows = layer_windows(cfg)
+
+    def scan_stack(x, blocks, dense_mlp):
+        n = jax.tree.leaves(blocks)[0].shape[0]
+        win_xs = windows if windows is not None else jnp.full((n,), -1, jnp.int32)
+
+        def body(carry, xs):
+            lp, w = xs
+            w_arg = w if windows is not None else cfg.sliding_window
+            y, cl = block_prefill(cfg, lp, carry, positions, w_arg,
+                                  prefix_len, max_len, dense_mlp)
+            return y, cl
+
+        if cfg.remat:
+            body = jax.remat(body, prevent_cse=False)
+        return scan_layers(body, x, (blocks, win_xs),
+                           unroll=cfg.unroll_layers)
+
+    cache = {"len": jnp.int32(S)}
+    if "dense_blocks" in params:
+        x, cache["dense_blocks"] = scan_stack(x, params["dense_blocks"], True)
+    x, cache["blocks"] = scan_stack(x, params["blocks"], False)
+    x = apply_norm(cfg.norm_kind, x, params["final_norm"])
+    logits = unembed(cfg, params, x[:, -1:])
+    return logits[:, 0], cache

@@ -1,0 +1,231 @@
+"""DQN agent with pluggable experience replay (the paper's test vehicle).
+
+Architecture follows the paper's setup (Sec. 2.4 / 4.1.2): 3-layer MLP
+action/target networks, epsilon-greedy exploration, hard target sync,
+replay memory with uniform / PER / AMPER-k / AMPER-fr sampling.  The
+ENTIRE loop — environment, replay, sampling, TD update — is one
+lax.scan, so a full CartPole run takes seconds on CPU.
+
+PER uses importance-sampling weights; AMPER samples uniformly from its
+CSP (per the paper) so its weights are 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.amper import AmperConfig, AmperSampler, UniformSampler
+from repro.core.per import CumsumPER, SumTreePER
+from repro.core.replay_buffer import ReplayBuffer
+from repro.rl import envs as envs_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class DQNConfig:
+    env: str = "cartpole"
+    sampler: str = "per-sumtree"   # uniform | per-sumtree | per-cumsum |
+                                   # amper-fr | amper-k
+    replay_size: int = 2000
+    batch: int = 64
+    hidden: int = 128
+    gamma: float = 0.99
+    lr: float = 1e-3
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_steps: int = 5000
+    target_sync: int = 100
+    learn_start: int = 200
+    train_every: int = 1
+    alpha: float = 0.6
+    beta: float = 0.4
+    # AMPER hyper-parameters (paper defaults: m=20, CSP ratio 0.15)
+    amper_m: int = 20
+    amper_lam_fr: float = 2.0
+    amper_csp_ratio: float = 0.15
+    v_max: float = 8.0
+
+
+def mlp_init(key, sizes):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k1, key = jax.random.split(key)
+        params.append({
+            "w": jax.random.normal(k1, (a, b)) * (2.0 / a) ** 0.5,
+            "b": jnp.zeros(b),
+        })
+    return params
+
+
+def mlp_apply(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def make_sampler(cfg: DQNConfig):
+    if cfg.sampler == "uniform":
+        return UniformSampler(cfg.replay_size)
+    if cfg.sampler == "per-sumtree":
+        return SumTreePER(cfg.replay_size)
+    if cfg.sampler == "per-cumsum":
+        return CumsumPER(cfg.replay_size)
+    variant = cfg.sampler.split("-")[1]
+    acfg = AmperConfig(
+        capacity=cfg.replay_size, m=cfg.amper_m, lam_fr=cfg.amper_lam_fr,
+        lam=cfg.amper_csp_ratio / 2.0, v_max=cfg.v_max,
+        csp_capacity=max(int(cfg.replay_size * cfg.amper_csp_ratio),
+                         cfg.batch),
+        knn_mode="bisect")
+    return AmperSampler(acfg, variant=variant)
+
+
+class AgentState(NamedTuple):
+    params: Any
+    target_params: Any
+    opt_m: Any
+    opt_v: Any
+    buffer: Any
+    env_state: Any
+    obs: jax.Array
+    step: jax.Array
+    episode_return: jax.Array
+    last_returns: jax.Array      # ring buffer of completed episode returns
+    n_episodes: jax.Array
+
+
+def make_dqn(cfg: DQNConfig):
+    env = envs_mod.ENVS[cfg.env]()
+    sampler = make_sampler(cfg)
+    is_per = cfg.sampler.startswith("per")
+    rb = ReplayBuffer(cfg.replay_size, sampler, alpha=cfg.alpha,
+                      beta=cfg.beta)
+
+    def init(key) -> AgentState:
+        k1, k2 = jax.random.split(key)
+        params = mlp_init(k1, [env.obs_dim, cfg.hidden, cfg.hidden,
+                               env.n_actions])
+        tr = {"obs": jnp.zeros(env.obs_dim), "action": jnp.int32(0),
+              "reward": jnp.float32(0), "next_obs": jnp.zeros(env.obs_dim),
+              "done": jnp.float32(0)}
+        env_state = env.reset(k2)
+        return AgentState(
+            params=params, target_params=params,
+            opt_m=jax.tree.map(jnp.zeros_like, params),
+            opt_v=jax.tree.map(jnp.zeros_like, params),
+            buffer=rb.init(tr), env_state=env_state,
+            obs=env.obs(env_state), step=jnp.int32(0),
+            episode_return=jnp.float32(0),
+            last_returns=jnp.zeros(64), n_episodes=jnp.int32(0))
+
+    def td_loss(params, target_params, batch, weights):
+        q = mlp_apply(params, batch["obs"])
+        qa = jnp.take_along_axis(q, batch["action"][:, None], 1)[:, 0]
+        qn = mlp_apply(target_params, batch["next_obs"])
+        target = batch["reward"] + cfg.gamma * (1 - batch["done"]) * qn.max(-1)
+        td = qa - jax.lax.stop_gradient(target)
+        return jnp.mean(weights * td * td), td
+
+    def adam(params, grads, m, v, step):
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+        v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+        c = step.astype(jnp.float32) + 1
+        lr = cfg.lr * jnp.sqrt(1 - 0.999 ** c) / (1 - 0.9 ** c)
+        params = jax.tree.map(
+            lambda p, mm, vv: p - lr * mm / (jnp.sqrt(vv) + eps), params, m, v)
+        return params, m, v
+
+    def agent_step(state: AgentState, key) -> tuple[AgentState, dict]:
+        k_act, k_env, k_sample, k_reset = jax.random.split(key, 4)
+        eps = jnp.clip(
+            cfg.eps_start + (cfg.eps_end - cfg.eps_start)
+            * state.step / cfg.eps_decay_steps, cfg.eps_end, cfg.eps_start)
+        q = mlp_apply(state.params, state.obs)
+        greedy = jnp.argmax(q)
+        action = jnp.where(jax.random.uniform(k_act) < eps,
+                           jax.random.randint(k_act, (), 0, env.n_actions),
+                           greedy).astype(jnp.int32)
+        env_state, next_obs, reward, done = env.step(
+            state.env_state, action, k_reset)
+        buffer = rb.add(state.buffer, {
+            "obs": state.obs, "action": action, "reward": reward,
+            "next_obs": next_obs, "done": done.astype(jnp.float32)})
+
+        ep_ret = state.episode_return + reward
+        last_returns = jnp.where(
+            done,
+            state.last_returns.at[state.n_episodes % 64].set(ep_ret),
+            state.last_returns)
+        n_episodes = state.n_episodes + done.astype(jnp.int32)
+        episode_return = jnp.where(done, 0.0, ep_ret)
+
+        def do_train(args):
+            params, m, v, buffer = args
+            idx, batch, w = rb.sample(buffer, k_sample, cfg.batch)
+            if not is_per:
+                w = jnp.ones_like(w)
+            (loss, td), grads = jax.value_and_grad(
+                td_loss, has_aux=True)(params, state.target_params, batch, w)
+            params, m, v = adam(params, grads, m, v, state.step)
+            buffer = rb.update_priorities(buffer, idx, td)
+            return params, m, v, buffer
+
+        should = (state.step >= cfg.learn_start) & (
+            state.step % cfg.train_every == 0)
+        params, m, v, buffer = jax.lax.cond(
+            should, do_train, lambda a: a,
+            (state.params, state.opt_m, state.opt_v, buffer))
+        target_params = jax.tree.map(
+            lambda t, p: jnp.where(state.step % cfg.target_sync == 0, p, t),
+            state.target_params, params)
+
+        obs = jnp.where(done, env.obs(env_state), next_obs)
+        new = AgentState(params=params, target_params=target_params,
+                         opt_m=m, opt_v=v, buffer=buffer,
+                         env_state=env_state, obs=env.obs(env_state),
+                         step=state.step + 1,
+                         episode_return=episode_return,
+                         last_returns=last_returns, n_episodes=n_episodes)
+        metrics = {"return_mean": jnp.where(
+            n_episodes > 0, last_returns.sum() / jnp.minimum(n_episodes, 64), 0.0)}
+        return new, metrics
+
+    @functools.partial(jax.jit, static_argnames="n_steps")
+    def train(key, n_steps: int):
+        state = init(key)
+        keys = jax.random.split(jax.random.fold_in(key, 1), n_steps)
+        state, metrics = jax.lax.scan(agent_step, state, keys)
+        return state, metrics
+
+    def evaluate(state: AgentState, key, n_episodes: int = 10) -> jax.Array:
+        """Greedy-policy average return (the paper's 'test score')."""
+        def one_ep(key):
+            k0, key = jax.random.split(key)
+            env_state = env.reset(k0)
+
+            def body(carry):
+                env_state, obs, ret, done, key = carry
+                key, k = jax.random.split(key)
+                action = jnp.argmax(mlp_apply(state.params, obs)).astype(jnp.int32)
+                env_state, obs2, r, d = env.step(env_state, action, k)
+                return (env_state, env.obs(env_state), ret + r * (1 - done),
+                        jnp.maximum(done, d.astype(jnp.float32)), key)
+
+            def cond(carry):
+                return carry[3] < 1
+
+            out = jax.lax.while_loop(
+                cond, body,
+                (env_state, env.obs(env_state), jnp.float32(0),
+                 jnp.float32(0), key))
+            return out[2]
+
+        return jax.vmap(one_ep)(jax.random.split(key, n_episodes)).mean()
+
+    return init, agent_step, train, evaluate

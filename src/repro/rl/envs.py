@@ -1,0 +1,125 @@
+"""Pure-JAX OpenAI-gym classic-control environments (paper Sec. 4.1.2).
+
+CartPole-v1 and Acrobot-v1 dynamics transcribed from gym (Euler / RK4
+integration, same constants, same termination), but fully jittable —
+the entire DQN train loop including the environment runs inside one
+lax.scan, which is what makes the reproduction fast enough on 1 CPU.
+
+Each env exposes: obs_dim, n_actions, reset(key), step(state, action, key)
+with auto-reset on termination (returns the fresh state and marks done).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EnvState(NamedTuple):
+    x: jax.Array        # physics state vector
+    t: jax.Array        # steps in current episode
+
+
+class CartPole:
+    """CartPole-v1: keep the pole upright; +1 per step; 500-step cap."""
+
+    obs_dim = 4
+    n_actions = 2
+    max_steps = 500
+
+    GRAV, MC, MP, LEN, F, TAU = 9.8, 1.0, 0.1, 0.5, 10.0, 0.02
+
+    def reset(self, key: jax.Array) -> EnvState:
+        x = jax.random.uniform(key, (4,), minval=-0.05, maxval=0.05)
+        return EnvState(x=x, t=jnp.int32(0))
+
+    def obs(self, state: EnvState) -> jax.Array:
+        return state.x
+
+    def step(self, state: EnvState, action: jax.Array, key: jax.Array):
+        x, x_dot, th, th_dot = state.x
+        force = jnp.where(action == 1, self.F, -self.F)
+        costh, sinth = jnp.cos(th), jnp.sin(th)
+        total_m = self.MC + self.MP
+        pm_l = self.MP * self.LEN
+        temp = (force + pm_l * th_dot**2 * sinth) / total_m
+        th_acc = (self.GRAV * sinth - costh * temp) / (
+            self.LEN * (4.0 / 3.0 - self.MP * costh**2 / total_m))
+        x_acc = temp - pm_l * th_acc * costh / total_m
+        new = jnp.stack([x + self.TAU * x_dot, x_dot + self.TAU * x_acc,
+                         th + self.TAU * th_dot, th_dot + self.TAU * th_acc])
+        t = state.t + 1
+        done = ((jnp.abs(new[0]) > 2.4) | (jnp.abs(new[2]) > 0.2095)
+                | (t >= self.max_steps))
+        reward = jnp.float32(1.0)
+        fresh = self.reset(key)
+        next_state = jax.tree.map(
+            lambda a, b: jnp.where(done, a, b), fresh, EnvState(x=new, t=t))
+        return next_state, EnvState(x=new, t=t).x, reward, done
+
+
+class Acrobot:
+    """Acrobot-v1: swing the tip above the bar; -1 per step until solved."""
+
+    obs_dim = 6
+    n_actions = 3
+    max_steps = 500
+
+    M1 = M2 = 1.0
+    L1 = 1.0
+    LC1 = LC2 = 0.5
+    I1 = I2 = 1.0
+    G = 9.8
+    DT = 0.2
+
+    def reset(self, key: jax.Array) -> EnvState:
+        x = jax.random.uniform(key, (4,), minval=-0.1, maxval=0.1)
+        return EnvState(x=x, t=jnp.int32(0))
+
+    def obs(self, state: EnvState) -> jax.Array:
+        th1, th2, d1, d2 = state.x
+        return jnp.stack([jnp.cos(th1), jnp.sin(th1), jnp.cos(th2),
+                          jnp.sin(th2), d1, d2])
+
+    def _dsdt(self, s, torque):
+        th1, th2, dth1, dth2 = s
+        m1, m2, l1, lc1, lc2, i1, i2, g = (self.M1, self.M2, self.L1,
+                                           self.LC1, self.LC2, self.I1,
+                                           self.I2, self.G)
+        d1 = m1 * lc1**2 + m2 * (l1**2 + lc2**2 + 2 * l1 * lc2 * jnp.cos(th2)) + i1 + i2
+        d2 = m2 * (lc2**2 + l1 * lc2 * jnp.cos(th2)) + i2
+        phi2 = m2 * lc2 * g * jnp.cos(th1 + th2 - jnp.pi / 2)
+        phi1 = (-m2 * l1 * lc2 * dth2**2 * jnp.sin(th2)
+                - 2 * m2 * l1 * lc2 * dth2 * dth1 * jnp.sin(th2)
+                + (m1 * lc1 + m2 * l1) * g * jnp.cos(th1 - jnp.pi / 2) + phi2)
+        ddth2 = ((torque + d2 / d1 * phi1 - m2 * l1 * lc2 * dth1**2 * jnp.sin(th2)
+                  - phi2) / (m2 * lc2**2 + i2 - d2**2 / d1))
+        ddth1 = -(d2 * ddth2 + phi1) / d1
+        return jnp.stack([dth1, dth2, ddth1, ddth2])
+
+    def step(self, state: EnvState, action: jax.Array, key: jax.Array):
+        torque = jnp.float32(action) - 1.0  # {-1, 0, +1}
+        # RK4 (gym uses rk4 on [0, dt])
+        s = state.x
+        h = self.DT
+        k1 = self._dsdt(s, torque)
+        k2 = self._dsdt(s + h / 2 * k1, torque)
+        k3 = self._dsdt(s + h / 2 * k2, torque)
+        k4 = self._dsdt(s + h * k3, torque)
+        new = s + h / 6 * (k1 + 2 * k2 + 2 * k3 + k4)
+        wrap = lambda a: ((a + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+        new = new.at[0].set(wrap(new[0])).at[1].set(wrap(new[1]))
+        new = new.at[2].set(jnp.clip(new[2], -4 * jnp.pi, 4 * jnp.pi))
+        new = new.at[3].set(jnp.clip(new[3], -9 * jnp.pi, 9 * jnp.pi))
+        t = state.t + 1
+        solved = -jnp.cos(new[0]) - jnp.cos(new[1] + new[0]) > 1.0
+        done = solved | (t >= self.max_steps)
+        reward = jnp.where(solved, 0.0, -1.0)
+        fresh = self.reset(key)
+        nxt = EnvState(x=new, t=t)
+        next_state = jax.tree.map(lambda a, b: jnp.where(done, a, b), fresh, nxt)
+        return next_state, self.obs(nxt), reward, done
+
+
+ENVS = {"cartpole": CartPole, "acrobot": Acrobot}

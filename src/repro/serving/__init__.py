@@ -1,0 +1,4 @@
+"""Serving: batched prefill/decode engine over the model zoo's caches."""
+from repro.serving.engine import Engine, GenerationResult
+
+__all__ = ["Engine", "GenerationResult"]

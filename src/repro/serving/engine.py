@@ -1,0 +1,68 @@
+"""Serving engine: batched prefill + decode with pluggable token choice.
+
+Wraps a ``Model`` with the full generation loop used by launch/serve.py
+and the serving examples.  The decode loop is jit-per-step (cache
+donated, so the ring of buffers never copies); ``generate`` also exposes
+greedy / temperature sampling and an early-stop token.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_api import Model
+
+
+class GenerationResult(NamedTuple):
+    tokens: jax.Array      # [B, gen_len]
+    logits_last: jax.Array  # [B, V] logits of the final step
+    cache: Any
+
+
+class Engine:
+    def __init__(self, model: Model, params: Any):
+        self.model = model
+        self.params = params
+        self._decode = jax.jit(model.decode_step, donate_argnums=2)
+
+    def prefill(self, batch: dict, max_len: int):
+        """Prompt batch -> (next-token logits [B,V], cache)."""
+        return jax.jit(
+            functools.partial(self.model.prefill, max_len=max_len)
+        )(self.params, batch)
+
+    def generate(self, batch: dict, gen_len: int, *,
+                 temperature: float = 0.0,
+                 key: Optional[jax.Array] = None,
+                 stop_token: Optional[int] = None) -> GenerationResult:
+        max_len = batch["tokens"].shape[1] + gen_len + 1
+        if self.model.cfg.vis_prefix_len:
+            max_len += self.model.cfg.vis_prefix_len
+        logits, cache = self.prefill(batch, max_len)
+        B = batch["tokens"].shape[0]
+        tok = self._choose(logits.reshape(B, -1), temperature, key, 0)
+        out = [tok]
+        done = jnp.zeros((B,), jnp.bool_)
+        for i in range(gen_len - 1):
+            logits, cache = self._decode(self.params, tok, cache)
+            nxt = self._choose(logits[:, -1], temperature, key, i + 1)
+            if stop_token is not None:
+                done = done | (tok[:, 0] == stop_token)
+                nxt = jnp.where(done[:, None], tok, nxt)
+            tok = nxt
+            out.append(tok)
+        return GenerationResult(tokens=jnp.concatenate(out, axis=1),
+                                logits_last=logits[:, -1], cache=cache)
+
+    @staticmethod
+    def _choose(logits: jax.Array, temperature: float,
+                key: Optional[jax.Array], step: int) -> jax.Array:
+        if temperature <= 0.0 or key is None:
+            tok = jnp.argmax(logits, axis=-1)
+        else:
+            tok = jax.random.categorical(
+                jax.random.fold_in(key, step), logits / temperature, axis=-1)
+        return tok.reshape(-1, 1).astype(jnp.int32)

@@ -1,0 +1,103 @@
+"""Data pipeline with AMPER prioritized sequence replay.
+
+The LM-side integration of the paper (DESIGN.md §Arch-applicability):
+training sequences live in a replay table with per-sequence priorities
+(EMA of the sequence's last loss — the LM analogue of |TD error|).  Each
+step the sampler (uniform / PER / AMPER-k / AMPER-fr — the full paper
+menu) draws the global batch, the step runs, and fresh per-sequence
+losses are written back.  The sample -> train -> update cycle is exactly
+Fig. 1 with the target network replaced by the LM.
+
+The token source is a deterministic synthetic corpus (seeded Zipf
+mixture) so every run — and every resume — is bitwise reproducible
+without external data; swap `corpus_tokens` for a memmap of real tokens
+in production.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.amper import AmperConfig, AmperSampler, UniformSampler
+from repro.core.per import CumsumPER
+
+
+def corpus_tokens(n_seqs: int, seq_len: int, vocab: int, seed: int = 0) -> np.ndarray:
+    """Deterministic synthetic corpus: per-sequence Zipf unigram mixtures."""
+    rng = np.random.default_rng(seed)
+    base = rng.zipf(1.5, size=(n_seqs, seq_len)).astype(np.int64)
+    return (base % vocab).astype(np.int32)
+
+
+class ReplayDataState(NamedTuple):
+    sampler_state: object
+    loss_ema: jax.Array     # float32[n_seqs]
+    seen: jax.Array         # int32[n_seqs]
+
+
+class PrioritizedSeqData:
+    """Priority-sampled sequence replay over a fixed token table."""
+
+    def __init__(self, tokens: np.ndarray, batch: int, *,
+                 sampler: str = "amper-fr", alpha: float = 0.6,
+                 v_max: float = 12.0, m: int = 20, lam_fr: float = 2.0,
+                 csp_ratio: float = 0.15, seed: int = 0):
+        self.tokens = jnp.asarray(tokens)
+        self.n_seqs, self.seq_len = tokens.shape
+        self.batch = batch
+        self.alpha = alpha
+        self.v_max = v_max
+        if sampler in ("amper-fr", "amper-k"):
+            cfg = AmperConfig(
+                capacity=self.n_seqs, m=m, lam_fr=lam_fr,
+                lam=csp_ratio / 2, v_max=v_max,
+                csp_capacity=max(int(self.n_seqs * csp_ratio), batch),
+                knn_mode="bisect")
+            self.sampler = AmperSampler(cfg, variant=sampler.split("-")[1])
+        elif sampler == "per":
+            self.sampler = CumsumPER(self.n_seqs)
+        else:
+            self.sampler = UniformSampler(self.n_seqs)
+
+    def init(self) -> ReplayDataState:
+        st = self.sampler.init()
+        # every sequence starts at max priority => replayed at least once
+        st = self.sampler.update(
+            st, jnp.arange(self.n_seqs),
+            jnp.full((self.n_seqs,), self.v_max, jnp.float32))
+        return ReplayDataState(
+            sampler_state=st,
+            loss_ema=jnp.full((self.n_seqs,), self.v_max, jnp.float32),
+            seen=jnp.zeros((self.n_seqs,), jnp.int32))
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def sample(self, state: ReplayDataState, key: jax.Array):
+        """-> (idx int32[batch], batch dict)."""
+        idx = self.sampler.sample(state.sampler_state, key, self.batch)
+        seq = self.tokens[idx]
+        batch = {
+            "tokens": seq[:, :-1],
+            "targets": seq[:, 1:],
+            "loss_mask": jnp.ones((self.batch, self.seq_len - 1), jnp.float32),
+        }
+        return idx, batch
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def update(self, state: ReplayDataState, idx: jax.Array,
+               seq_loss: jax.Array) -> ReplayDataState:
+        """Write back fresh per-sequence losses (the LM 'TD errors')."""
+        # first write replaces (init value is a v_max placeholder);
+        # subsequent writes smooth with an EMA.
+        old = state.loss_ema[idx]
+        blended = jnp.where(state.seen[idx] > 0,
+                            0.5 * old + 0.5 * seq_loss, seq_loss)
+        ema = state.loss_ema.at[idx].set(blended)
+        prio = jnp.clip(ema[idx], 0.0, self.v_max) ** self.alpha
+        st = self.sampler.update(state.sampler_state, idx, prio)
+        return ReplayDataState(
+            sampler_state=st, loss_ema=ema,
+            seen=state.seen.at[idx].add(1))

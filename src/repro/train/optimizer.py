@@ -1,0 +1,136 @@
+"""AdamW + global-norm clipping + LR schedules, from scratch.
+
+Also hosts the int8 error-feedback gradient compressor used for the
+cross-pod gradient sync (distributed/collectives.py wires it into a
+manual-"pod"-axis shard_map): per-tensor symmetric int8 quantization with
+the quantization error carried to the next step, which keeps SGD/Adam
+convergence while cutting cross-pod (DCN) gradient bytes 4x.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+    master: Any = None   # fp32 master copies when params are low-precision
+
+
+class AdamW:
+    """AdamW with optional mixed precision.
+
+    ``mixed_precision=True`` expects LOW-precision (bf16) model params:
+    fp32 master weights live in the optimizer state, the update runs in
+    fp32 against the master, and the bf16 params are re-derived each
+    step.  This halves every FSDP param all-gather and grad
+    reduce-scatter on the wire — the collective-bound hillclimb lever.
+    """
+
+    def __init__(self, lr: Callable[[jax.Array], jax.Array] | float,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0,
+                 mixed_precision: bool = False):
+        self.lr = lr if callable(lr) else (lambda step: jnp.float32(lr))
+        self.b1, self.b2, self.eps = b1, b2, eps
+        self.weight_decay = weight_decay
+        self.clip_norm = clip_norm
+        self.mixed_precision = mixed_precision
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda t: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), t)
+        master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+                  if self.mixed_precision else None)
+        return AdamWState(m=zeros(params), v=zeros(params),
+                          count=jnp.zeros((), jnp.int32), master=master)
+
+    def update(self, grads, state: AdamWState, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gnorm = global_norm(grads)
+        if self.clip_norm:
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        count = state.count + 1
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state.m, grads)
+        v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, state.v, grads)
+        c = count.astype(jnp.float32)
+        mhat_scale = 1.0 / (1 - b1 ** c)
+        vhat_scale = 1.0 / (1 - b2 ** c)
+        lr = self.lr(count)
+        ref = state.master if self.mixed_precision else params
+
+        def upd(p_ref, mm, vv):
+            u = (mm * mhat_scale) / (jnp.sqrt(vv * vhat_scale) + self.eps)
+            u = u + self.weight_decay * p_ref.astype(jnp.float32)
+            return p_ref.astype(jnp.float32) - lr * u
+
+        new_master = jax.tree.map(upd, ref, m, v)
+        if self.mixed_precision:
+            new_params = jax.tree.map(
+                lambda nm, p: nm.astype(p.dtype), new_master, params)
+            st = AdamWState(m=m, v=v, count=count, master=new_master)
+        else:
+            new_params = jax.tree.map(
+                lambda nm, p: nm.astype(p.dtype), new_master, params)
+            st = AdamWState(m=m, v=v, count=count, master=None)
+        return new_params, st, {"grad_norm": gnorm, "lr": lr}
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor_frac + (1 - floor_frac) * 0.5 * (1 + jnp.cos(math.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback compression (cross-pod gradient sync)
+# ---------------------------------------------------------------------------
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8. Returns (q, scale)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, error):
+    """Error-feedback int8 round-trip of a gradient tree.
+
+    Returns (quantized_tree [(q, scale) leaves], new_error_tree).  The
+    caller psums the int8 payload across the pod axis; the residual
+    (g+e) - dq(q) is carried to the next step so compression noise does
+    not bias the long-run gradient estimate (EF-SGD / EF21).
+    """
+    def one(g, e):
+        t = g.astype(jnp.float32) + e
+        q, s = quantize_int8(t)
+        back = dequantize_int8(q, s)
+        return (q, s), t - back
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    qs, errs = zip(*(one(g, e) for g, e in zip(flat_g, flat_e)))
+    return (jax.tree.unflatten(treedef, [q for q in qs]),
+            jax.tree.unflatten(treedef, list(errs)))

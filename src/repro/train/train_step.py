@@ -1,0 +1,102 @@
+"""Train-step factory: grad accumulation, mixed precision, metrics.
+
+``make_train_step(model, optimizer)`` returns a pure (state, batch) ->
+(state, metrics) function ready for jit with in/out shardings derived
+from the model's logical axes.  Microbatching scans over batch slices
+accumulating fp32 grads (sequential grad accumulation — the standard
+memory/throughput trade at large global batch).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt_state: Any
+
+
+def init_train_state(model, optimizer, key) -> TrainState:
+    params = model.init_params(key)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      opt_state=optimizer.init(params))
+
+
+def abstract_train_state(model, optimizer) -> TrainState:
+    params = model.abstract_params()
+    f32 = lambda t: jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), t)
+    from repro.train.optimizer import AdamWState
+    master = f32(params) if optimizer.mixed_precision else None
+    return TrainState(
+        step=jax.ShapeDtypeStruct((), jnp.int32), params=params,
+        opt_state=AdamWState(m=f32(params), v=f32(params),
+                             count=jax.ShapeDtypeStruct((), jnp.int32),
+                             master=master))
+
+
+def train_state_axes(model, optimizer=None) -> TrainState:
+    """Logical-axes tree for the full train state (for shardings)."""
+    axes = model.param_axes()
+    from repro.train.optimizer import AdamWState
+    mixed = bool(optimizer is not None and optimizer.mixed_precision)
+    return TrainState(step=(), params=axes,
+                      opt_state=AdamWState(m=axes, v=axes, count=(),
+                                           master=axes if mixed else None))
+
+
+def make_train_step(model, optimizer, *, microbatches: int = 1,
+                    grad_fn_override=None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return g, dict(metrics, loss=loss)
+
+    def accumulate(params, batch):
+        if microbatches == 1:
+            return grads_of(params, batch)
+        split = jax.tree.map(
+            lambda t: t.reshape((microbatches, t.shape[0] // microbatches)
+                                + t.shape[1:]), batch)
+
+        def body(carry, mb):
+            acc, msum = carry
+            g, metrics = grads_of(params, mb)
+            acc = jax.tree.map(lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+            msum = jax.tree.map(lambda a, b: a + b, msum, metrics)
+            return (acc, msum), None
+
+        zeros_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        m_struct = jax.eval_shape(
+            lambda mb: grads_of(params, mb)[1],
+            jax.tree.map(lambda t: t[0], split))
+        zeros_m = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m_struct)
+        (acc, msum), _ = jax.lax.scan(body, (zeros_g, zeros_m), split)
+        g = jax.tree.map(lambda a: a / microbatches, acc)
+        metrics = jax.tree.map(lambda a: a / microbatches, msum)
+        return g, metrics
+
+    def train_step(state: TrainState, batch) -> tuple[TrainState, dict]:
+        if grad_fn_override is not None:
+            g = grad_fn_override(state.params, batch)
+            metrics = {}
+        else:
+            g, metrics = accumulate(state.params, batch)
+        new_params, opt_state, opt_metrics = optimizer.update(
+            g, state.opt_state, state.params)
+        metrics = {**metrics, **opt_metrics}
+        return TrainState(step=state.step + 1, params=new_params,
+                          opt_state=opt_state), metrics
+
+    return train_step

@@ -1,0 +1,124 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.quantize as qz
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n", [128, 4096, 5000, 16384])
+@pytest.mark.parametrize("maskbits", [0, 7, 12, 20])
+def test_tcam_match_sweep(n, maskbits):
+    pq = jax.random.randint(jax.random.key(n + maskbits), (n,), 0, 1 << 24,
+                            dtype=jnp.int32)
+    query = pq[n // 2]  # guarantee at least one hit
+    mask = jnp.int32((1 << maskbits) - 1)
+    out = ops.tcam_match(pq, query, mask)
+    expected = ref.tcam_match_ref(pq, query, mask)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expected))
+    assert bool(out[n // 2])
+
+
+@pytest.mark.parametrize("n,m", [(1024, 1), (4096, 8), (9000, 20)])
+def test_multi_query_sweep(n, m):
+    key = jax.random.key(n * m)
+    pq = jax.random.randint(key, (n,), 0, 1 << 24, dtype=jnp.int32)
+    valid = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.85, (n,))
+    centers = jax.random.randint(jax.random.fold_in(key, 2), (m,), 0, 1 << 24,
+                                 dtype=jnp.int32)
+    radius = jax.random.randint(jax.random.fold_in(key, 3), (m,), 0, 1 << 20,
+                                dtype=jnp.int32)
+    lo, hi = centers - radius, centers + radius
+    sel, cnt = ops.multi_query_match(pq, valid, lo, hi)
+    sel_r, cnt_r = ref.multi_query_match_ref(pq, valid, lo, hi)
+    np.testing.assert_array_equal(np.asarray(sel), np.asarray(sel_r))
+    np.testing.assert_array_equal(np.asarray(cnt), np.asarray(cnt_r))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,s,d,causal,window",
+    [
+        (2, 4, 2, 256, 64, True, None),    # GQA
+        (1, 8, 1, 256, 128, True, None),   # MQA
+        (2, 4, 4, 256, 128, True, 64),     # MHA + sliding window
+        (1, 2, 2, 256, 256, False, None),  # bidirectional (encoder)
+        (1, 4, 2, 300, 64, True, None),    # non-tile-aligned seq
+    ])
+def test_flash_attention_sweep(dtype, b, hq, hkv, s, d, causal, window):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, hq, s, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window)
+    expected = ref.attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expected, np.float32),
+        atol=tol, rtol=tol)
+
+
+def test_flash_matches_model_chunked_attention():
+    """Pallas kernel == the jnp blockwise training path."""
+    from repro.models.attention import chunked_attention, make_mask_fn
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (2, 4, 256, 64))
+    k = jax.random.normal(ks[1], (2, 2, 256, 64))
+    v = jax.random.normal(ks[2], (2, 2, 256, 64))
+    a = ops.flash_attention(q, k, v, causal=True)
+    b = chunked_attention(q, k, v, make_mask_fn(True, None, None),
+                          bq=64, bkv=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+def test_kernel_amper_parity_large():
+    """Fused kernel path drives the same CSP as XLA on a big table."""
+    from repro.core.amper import AmperConfig, build_csp_fr, build_csp_fr_kernel
+    n = 1 << 15
+    p = jax.random.uniform(jax.random.key(4), (n,))
+    pq = qz.quantize(p, 1.0)
+    valid = jnp.ones(n, bool)
+    cfg = AmperConfig(capacity=n, m=20, lam_fr=2.0, csp_capacity=4096)
+    key = jax.random.key(5)
+    a = build_csp_fr(pq, valid, key, cfg)
+    b = build_csp_fr_kernel(pq, valid, key, cfg)
+    np.testing.assert_array_equal(np.asarray(a.selected), np.asarray(b.selected))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,hkv,group,s,d,cur", [
+    (2, 2, 4, 1024, 64, 700),    # GQA
+    (1, 1, 8, 512, 128, 512),    # MQA, full cache
+    (2, 4, 1, 300, 96, 37),      # MHA, ragged S and D
+])
+def test_decode_attention_sweep(dtype, b, hkv, group, s, d, cur):
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (b, hkv, group, d), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, d), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, d), dtype)
+    out = ops.decode_attention(q, k, v, cur, bkv=256)
+    expected = ref.decode_attention_ref(q, k, v, cur)
+    tol = 3e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expected, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_decode_kernel_matches_model_path():
+    """Pallas decode kernel == models.attention.decode_attention."""
+    from repro.models.attention import decode_attention as model_decode, \
+        make_mask_fn
+    ks = jax.random.split(jax.random.key(2), 3)
+    b, hkv, group, s, d = 2, 2, 3, 256, 64
+    q4 = jax.random.normal(ks[0], (b, hkv * group, 1, d))
+    k = jax.random.normal(ks[1], (b, hkv, s, d))
+    v = jax.random.normal(ks[2], (b, hkv, s, d))
+    cur = jnp.int32(100)
+    a = model_decode(q4, k, v, cur, make_mask_fn(True, None, None))
+    qg = q4.reshape(b, hkv, group, d)
+    b_out = ops.decode_attention(qg, k, v, cur, bkv=128)
+    np.testing.assert_allclose(
+        np.asarray(a[:, :, 0]).reshape(b, hkv, group, d),
+        np.asarray(b_out), atol=3e-5)

@@ -1,0 +1,106 @@
+"""Per-arch smoke tests (assignment requirement): reduced config of the
+same family, one forward/train step on CPU, output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced_config
+from repro.models.model_api import Model, SHAPE_CELLS
+
+B, S = 2, 64
+
+
+def make_batch(cfg, key):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+    batch = {"tokens": toks, "targets": toks,
+             "loss_mask": jnp.ones((B, S), jnp.float32)}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    if cfg.vis_prefix_len:
+        st = S - cfg.vis_prefix_len
+        batch.update(
+            tokens=toks[:, :st], targets=toks[:, :st],
+            loss_mask=jnp.ones((B, st), jnp.float32),
+            patch_embeds=jax.random.normal(
+                key, (B, cfg.vis_prefix_len, cfg.d_model), jnp.float32))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    assert cfg.name == arch
+    # spot-check the assigned numbers
+    expected = {
+        "rwkv6-7b": (32, 4096, 14336, 65536),
+        "h2o-danube-3-4b": (24, 3840, 10240, 32000),
+        "granite-34b": (88, 6144, 24576, 49152),
+        "phi3-medium-14b": (40, 5120, 17920, 100352),
+        "stablelm-1.6b": (24, 2048, 5632, 100352),
+        "whisper-tiny": (4, 384, 1536, 51865),
+        "hymba-1.5b": (32, 1600, 5504, 32001),
+        "deepseek-moe-16b": (28, 2048, None, 102400),
+        "deepseek-v2-lite-16b": (27, 2048, None, 102400),
+        "paligemma-3b": (18, 2048, 16384, 257216),
+    }[arch]
+    assert cfg.n_layers == expected[0]
+    assert cfg.d_model == expected[1]
+    if expected[2] is not None:
+        assert cfg.d_ff == expected[2]
+    assert cfg.vocab_size == expected[3]
+    if "deepseek" in arch:
+        assert cfg.n_experts == 64 and cfg.moe_top_k == 6
+        assert cfg.moe_d_ff == 1408 and cfg.n_shared_experts == 2
+    if arch == "deepseek-v2-lite-16b":
+        assert cfg.kv_lora_rank == 512
+    if arch == "hymba-1.5b":
+        assert cfg.ssm_state == 16
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_train_step(arch):
+    cfg = get_reduced_config(arch, dtype="float32")
+    model = Model.from_config(cfg)
+    params = model.init_params(jax.random.key(0))
+    batch = make_batch(cfg, jax.random.key(1))
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: loss={loss}"
+    grads = jax.jit(jax.grad(lambda p: model.loss(p, batch)[0]))(params)
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert bool(jnp.all(jnp.isfinite(g))), f"{arch}: NaN grad at {path}"
+
+
+@pytest.mark.parametrize("arch", ["stablelm-1.6b", "rwkv6-7b",
+                                  "deepseek-moe-16b", "hymba-1.5b"])
+def test_reduced_forward_shapes(arch):
+    from repro.models import transformer
+    cfg = get_reduced_config(arch, dtype="float32")
+    model = Model.from_config(cfg)
+    params = model.init_params(jax.random.key(0))
+    toks = jnp.ones((B, S), jnp.int32)
+    logits, _ = transformer.forward(cfg, params, toks)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_long_context_flags():
+    """long_500k applicability matches DESIGN.md §Arch-applicability."""
+    runnable = {a for a in ARCH_IDS if get_config(a).supports_long_context}
+    assert runnable == {"rwkv6-7b", "hymba-1.5b", "h2o-danube-3-4b"}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_input_specs_all_cells(arch):
+    """input_specs produce well-formed ShapeDtypeStructs for all 4 cells."""
+    cfg = get_config(arch)
+    model = Model.from_config(cfg)
+    for shape, cell in SHAPE_CELLS.items():
+        if shape == "long_500k" and not cfg.supports_long_context:
+            continue
+        specs = model.input_specs(shape)
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+            assert all(d > 0 for d in leaf.shape)

@@ -1,0 +1,93 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import repro.core.quantize as qz
+from repro.core.per import CumsumPER, SumTreePER
+
+MAXQ = (1 << 24) - 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.0, 10.0), st.floats(0.001, 10.0))
+def test_quantize_roundtrip(p, v_max):
+    q = qz.quantize(jnp.float32(p), v_max)
+    back = float(qz.dequantize(q, v_max))
+    assert 0 <= int(q) <= MAXQ
+    assert abs(back - min(p, v_max)) <= v_max / MAXQ + 1e-6
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, MAXQ))
+def test_prefix_mask_is_low_bits(delta):
+    m = int(qz.prefix_mask(jnp.int32(delta)))
+    # mask is of form 2^k - 1 and covers delta
+    assert (m & (m + 1)) == 0
+    if delta > 0:
+        assert m >= delta
+        assert m <= 2 * delta - 1 if delta > 0 else m == 0
+    else:
+        assert m == 0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, MAXQ), st.integers(0, MAXQ))
+def test_ternary_match_range_equivalence(value, query):
+    """(v ^ q) & ~mask == 0 iff v in [q&~mask, q|mask] — the TCAM/range
+    duality the fused kernel relies on."""
+    delta = query // 8
+    mask = qz.prefix_mask(jnp.int32(delta))
+    lo, hi = qz.prefix_range(jnp.int32(query), mask)
+    matched = bool(qz.ternary_match(jnp.int32(value), jnp.int32(query), mask))
+    in_range = int(lo) <= value <= int(hi)
+    assert matched == in_range
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(0.0, 5.0), min_size=4, max_size=64),
+       st.integers(0, 2**31 - 1))
+def test_sumtree_total_invariant(ps, seed):
+    n = len(ps)
+    tree = SumTreePER(n)
+    s = tree.update(tree.init(), jnp.arange(n), jnp.asarray(ps, jnp.float32))
+    np.testing.assert_allclose(float(tree.total(s)), sum(ps),
+                               rtol=1e-4, atol=1e-4)
+    # sampling always returns in-range indices even with zero priorities
+    idx = tree.sample(s, jax.random.key(seed % 2**31), 32)
+    assert bool(jnp.all((idx >= 0) & (idx < n)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(0.01, 5.0), min_size=4, max_size=64),
+       st.integers(0, 2**31 - 1))
+def test_cumsum_sampler_in_support(ps, seed):
+    n = len(ps)
+    cs = CumsumPER(n)
+    s = cs.update(cs.init(), jnp.arange(n), jnp.asarray(ps, jnp.float32))
+    idx = cs.sample(s, jax.random.key(seed % 2**31), 64)
+    assert bool(jnp.all((idx >= 0) & (idx < n)))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 12), st.floats(0.2, 4.0), st.integers(0, 10_000))
+def test_csp_members_within_prefix_blocks(m, lam_fr, seed):
+    """Every CSP member lies in SOME group's accepted prefix block."""
+    from repro.core.amper import AmperConfig, build_csp_fr, fr_queries, \
+        group_representatives
+    n = 256
+    key = jax.random.key(seed)
+    p = jax.random.uniform(jax.random.fold_in(key, 1), (n,))
+    pq = qz.quantize(p, 1.0)
+    cfg = AmperConfig(capacity=n, m=m, lam_fr=lam_fr, v_max=1.0,
+                      csp_capacity=n)
+    res = build_csp_fr(pq, jnp.ones(n, bool), key, cfg)
+    v = group_representatives(jax.random.split(key)[0], cfg)
+    vq, mask = fr_queries(v, cfg)
+    lo, hi = qz.prefix_range(vq, mask)
+    sel = np.asarray(res.selected)
+    pqn = np.asarray(pq)
+    ok = ((pqn[None, :] >= np.asarray(lo)[:, None])
+          & (pqn[None, :] <= np.asarray(hi)[:, None])).any(0)
+    assert (sel <= ok).all(), "selected someone outside every block"
