@@ -17,7 +17,7 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes / fewer seeds")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig4,fig7,fig9,table1,samplers")
+                    help="comma list: fig4,fig7,fig9,table1,samplers,venv")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     failures = []
@@ -32,8 +32,9 @@ def main() -> None:
             failures.append(name)
             traceback.print_exc()
 
-    from benchmarks import (bench_samplers, fig4_latency, fig7_sampling_error,
-                            fig9_hw_latency, table1_learning)
+    from benchmarks import (bench_samplers, bench_vector_env, fig4_latency,
+                            fig7_sampling_error, fig9_hw_latency,
+                            table1_learning)
 
     section("fig4", lambda: fig4_latency.run(
         sizes=(1000, 10_000) if args.quick else (1000, 10_000, 100_000)))
@@ -49,6 +50,9 @@ def main() -> None:
     section("samplers", lambda: bench_samplers.run(
         sizes=(10_000, 100_000) if args.quick else
         (10_000, 100_000, 1_000_000)))
+    section("venv", lambda: bench_vector_env.run(
+        widths=(1, 16) if args.quick else (1, 4, 16, 64),
+        steps=1000 if args.quick else 2000))
 
     if failures:
         print(f"\nFAILED sections: {failures}")

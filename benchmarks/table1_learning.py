@@ -4,6 +4,10 @@ Smoke-scale protocol (full-scale via --steps): CartPole with replay 2000,
 PER vs AMPER-k vs AMPER-fr vs uniform, averaged over seeds; test score =
 greedy-policy return averaged over 10 episodes (the paper's metric).
 Claim: AMPER variants reach scores comparable to PER.
+
+Seeds run data-parallel through ``train_many`` (one compiled program,
+vmapped over the seed batch) instead of a Python loop — the many-seed
+sweep regime of Schaul et al. / Panahi et al. as a single XLA launch.
 """
 from __future__ import annotations
 
@@ -18,19 +22,23 @@ from repro.rl.dqn import DQNConfig, make_dqn
 SAMPLERS = ("per-sumtree", "amper-k", "amper-fr", "uniform")
 
 
+def jnp_stack_keys(seeds):
+    return jax.vmap(jax.random.key)(np.asarray(seeds, np.uint32))
+
+
 def run(env: str = "cartpole", steps: int = 6000, seeds=(0, 1, 2),
-        replay: int = 2000, verbose: bool = True):
+        replay: int = 2000, num_envs: int = 1, verbose: bool = True):
     rows = {}
+    train_keys = jnp_stack_keys(seeds)
+    eval_keys = jnp_stack_keys(tuple(s + 100 for s in seeds))
     for sampler in SAMPLERS:
-        scores = []
-        for seed in seeds:
-            cfg = DQNConfig(env=env, sampler=sampler, replay_size=replay,
-                            eps_decay_steps=steps // 2, learn_start=200)
-            _, _, train, evaluate = make_dqn(cfg)
-            state, _ = train(jax.random.key(seed), steps)
-            scores.append(float(evaluate(state, jax.random.key(seed + 100),
-                                         10)))
-        rows[sampler] = (float(np.mean(scores)), float(np.std(scores)))
+        cfg = DQNConfig(env=env, sampler=sampler, replay_size=replay,
+                        num_envs=num_envs,
+                        eps_decay_steps=steps // 2, learn_start=200)
+        dqn = make_dqn(cfg)
+        states, _ = dqn.train_many(train_keys, steps)
+        scores = np.asarray(dqn.evaluate_many(states, eval_keys, 10))
+        rows[sampler] = (float(scores.mean()), float(scores.std()))
         if verbose:
             print(f"table1 {env} {sampler:12s} test={rows[sampler][0]:7.1f} "
                   f"+- {rows[sampler][1]:.1f}  (seeds={list(seeds)})")
@@ -42,8 +50,10 @@ def main():
     ap.add_argument("--env", default="cartpole")
     ap.add_argument("--steps", type=int, default=6000)
     ap.add_argument("--seeds", type=int, default=2)
+    ap.add_argument("--num-envs", type=int, default=1)
     args = ap.parse_args()
-    rows = run(args.env, args.steps, seeds=tuple(range(args.seeds)))
+    rows = run(args.env, args.steps, seeds=tuple(range(args.seeds)),
+               num_envs=args.num_envs)
     for k, (mean, std) in rows.items():
         print(csv_row(f"table1/{args.env}/{k}", 0.0,
                       f"test_score={mean:.1f}+-{std:.1f}"))

@@ -7,11 +7,16 @@ from repro.core.amper import (
     UniformSampler,
     build_csp_fr,
     build_csp_k,
-    make_sampler,
     sample_from_csp,
 )
 from repro.core.per import CumsumPER, SumTreePER, importance_weights
 from repro.core.replay_buffer import ReplayBuffer, ReplayState
+from repro.core.samplers import (
+    Sampler,
+    available_samplers,
+    make_sampler,
+    register_sampler,
+)
 
 # NOTE: fixed-point helpers live in repro.core.quantize; they are NOT
 # re-exported here because the function name `quantize` would shadow the
@@ -19,7 +24,8 @@ from repro.core.replay_buffer import ReplayBuffer, ReplayState
 
 __all__ = [
     "AmperConfig", "AmperSampler", "AmperState", "CspResult", "UniformSampler",
-    "build_csp_fr", "build_csp_k", "make_sampler", "sample_from_csp",
+    "build_csp_fr", "build_csp_k", "sample_from_csp",
     "CumsumPER", "SumTreePER", "importance_weights",
     "ReplayBuffer", "ReplayState",
+    "Sampler", "available_samplers", "make_sampler", "register_sampler",
 ]

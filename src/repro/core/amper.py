@@ -233,17 +233,6 @@ def _interval_membership(pq: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Arr
     return jnp.where(idx >= 0, depth[jnp.clip(idx, 0, 2 * m - 1)] > 0, False)
 
 
-def build_csp_fr_interval(pq: jax.Array, valid: jax.Array, key: jax.Array,
-                          cfg: AmperConfig) -> CspResult:
-    """AMPER-fr via interval stabbing (bit-identical selection to
-    :func:`build_csp_fr`, one table pass instead of m)."""
-    kv, kroll = jax.random.split(key)
-    v_rep = group_representatives(kv, cfg)
-    lo, hi = fr_intervals(v_rep, cfg)
-    selected = _interval_membership(pq, lo, hi) & valid
-    return _compact(selected, cfg.csp_capacity, kroll)
-
-
 def _window_membership(pq: jax.Array, lo: jax.Array, hi: jax.Array,
                        cfg: AmperConfig) -> jax.Array:
     """Neighbour-window membership: O(ceil(2*lam')) ops/row, no (m,N) temps.
@@ -360,9 +349,10 @@ def sample_from_csp(csp: CspResult, key: jax.Array, batch: int,
     to uniform over the live buffer — the same degenerate behaviour a
     hardware CSP buffer underflow would trigger.
     """
-    u = jax.random.randint(key, (batch,), 0, jnp.maximum(csp.count, 1))
+    k_pick, k_fb = jax.random.split(key)
+    u = jax.random.randint(k_pick, (batch,), 0, jnp.maximum(csp.count, 1))
     picked = csp.indices[u]
-    fallback = jax.random.randint(key, (batch,), 0, jnp.maximum(fallback_size, 1))
+    fallback = jax.random.randint(k_fb, (batch,), 0, jnp.maximum(fallback_size, 1))
     return jnp.where(csp.count > 0, picked, fallback).astype(jnp.int32)
 
 
@@ -422,19 +412,10 @@ class AmperSampler:
 
 
 def make_sampler(kind: str, capacity: int, **kw):
-    """Factory: 'uniform' | 'per-sumtree' | 'per-cumsum' | 'amper-fr' | 'amper-k'."""
-    from repro.core import per as per_mod  # local import to avoid cycles
+    """Deprecated alias for :func:`repro.core.samplers.make_sampler`."""
+    from repro.core import samplers  # local import to avoid cycles
 
-    if kind == "per-sumtree":
-        return per_mod.SumTreePER(capacity)
-    if kind == "per-cumsum":
-        return per_mod.CumsumPER(capacity)
-    if kind in ("amper-fr", "amper-k"):
-        cfg = AmperConfig(capacity=capacity, **kw)
-        return AmperSampler(cfg, variant=kind.split("-")[1])
-    if kind == "uniform":
-        return UniformSampler(capacity)
-    raise ValueError(f"unknown sampler kind: {kind!r}")
+    return samplers.make_sampler(kind, capacity, **kw)
 
 
 class UniformState(NamedTuple):

@@ -17,6 +17,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.per import importance_weights
+
 
 class ReplayState(NamedTuple):
     storage: Any          # pytree of arrays with leading dim = capacity
@@ -59,17 +61,36 @@ class ReplayBuffer:
 
     def add(self, state: ReplayState, transition: Any) -> ReplayState:
         """Store one transition at the ring position with max priority."""
+        return self.add_batch(
+            state, jax.tree.map(lambda x: jnp.asarray(x)[None], transition))
+
+    def add_batch(self, state: ReplayState, transitions: Any) -> ReplayState:
+        """Store B transitions (leading dim B on every leaf) in one shot.
+
+        The write slots are the contiguous ring arc
+        ``(pos + arange(B)) % capacity`` — distinct as long as
+        B <= capacity, so one batched sampler priority write replaces B
+        sequential ones and every sampler's scatter semantics stay
+        well-defined across the wraparound.
+        """
+        b = jax.tree.leaves(transitions)[0].shape[0]
+        if b > self.capacity:
+            raise ValueError(
+                f"add_batch of {b} transitions exceeds capacity "
+                f"{self.capacity}: ring slots would collide within one write")
+        idx = (state.pos + jnp.arange(b, dtype=jnp.int32)) % self.capacity
         storage = jax.tree.map(
-            lambda buf, x: buf.at[state.pos].set(x), state.storage, transition
+            lambda buf, x: buf.at[idx].set(x), state.storage, transitions
         )
         sampler_state = self.sampler.update(
-            state.sampler_state, state.pos[None], state.max_priority[None]
+            state.sampler_state, idx,
+            jnp.broadcast_to(state.max_priority, (b,))
         )
         return ReplayState(
             storage=storage,
             sampler_state=sampler_state,
-            pos=(state.pos + 1) % self.capacity,
-            size=jnp.minimum(state.size + 1, self.capacity),
+            pos=(state.pos + b) % self.capacity,
+            size=jnp.minimum(state.size + b, self.capacity),
             max_priority=state.max_priority,
         )
 
@@ -78,10 +99,8 @@ class ReplayBuffer:
         idx = self.sampler.sample(state.sampler_state, key, batch)
         batch_tree = jax.tree.map(lambda buf: buf[idx], state.storage)
         prios = self.sampler.priorities(state.sampler_state)
-        total = jnp.maximum(jnp.sum(prios), 1e-12)
-        p_sel = jnp.maximum(prios[idx], 1e-12) / total
-        w = (jnp.maximum(state.size, 1).astype(jnp.float32) * p_sel) ** (-self.beta)
-        w = w / jnp.maximum(jnp.max(w), 1e-12)
+        w = importance_weights(prios, idx, jnp.maximum(state.size, 1),
+                               self.beta)
         return idx, batch_tree, w
 
     def update_priorities(self, state: ReplayState, idx: jax.Array,

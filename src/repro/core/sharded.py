@@ -37,20 +37,21 @@ from jax.experimental.shard_map import shard_map
 
 import repro.core.quantize as qz
 from repro.core.amper import AmperConfig, fr_queries, fr_radii, group_representatives
+from repro.distributed.sharding import axis_size
 
 
 def _flat_axis_index(axis_names: Sequence[str]) -> jax.Array:
     """Row-major linear index of this shard over possibly-multiple mesh axes."""
     idx = jnp.int32(0)
     for name in axis_names:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        idx = idx * axis_size(name) + jax.lax.axis_index(name)
     return idx
 
 
-def _n_shards(axis_names: Sequence[str]) -> int:
-    n = 1
+def _n_shards(axis_names: Sequence[str]) -> jax.Array:
+    n = jnp.int32(1)
     for name in axis_names:
-        n *= jax.lax.axis_size(name)
+        n = n * axis_size(name)
     return n
 
 

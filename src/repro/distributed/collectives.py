@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.distributed.sharding import axis_size
 from repro.train import optimizer as opt_mod
 
 
@@ -33,7 +34,7 @@ def psum_int8_mean(grads: Any, axis: str) -> Any:
     is the narrow tensor, which is what the collective-bytes analysis
     counts).
     """
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
 
     def one(g):
         q, s = opt_mod.quantize_int8(g.astype(jnp.float32))

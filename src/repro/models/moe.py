@@ -16,7 +16,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.distributed.sharding import logical_constraint
+from repro.distributed.sharding import axis_size, logical_constraint
 from repro.models.common import ParamSpec
 from repro.models import mlp as mlp_mod
 
@@ -111,7 +111,7 @@ def moe_apply_shard_map(cfg, p: dict, x: jax.Array) -> Tuple[jax.Array, dict]:
         # my token group's slice from every expert owner: (E, Cl, D)
         g_lin = jnp.int32(0)
         for a in dp_axes:
-            g_lin = g_lin * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            g_lin = g_lin * axis_size(a) + jax.lax.axis_index(a)
         my_slice = jax.lax.dynamic_slice_in_dim(
             eo.reshape(E_loc, G, Cl, D).transpose(1, 0, 2, 3),  # (G,E_loc,Cl,D)
             g_lin, 1, 0)[0]                                     # (E_loc, Cl, D)

@@ -6,29 +6,41 @@ replay memory with uniform / PER / AMPER-k / AMPER-fr sampling.  The
 ENTIRE loop — environment, replay, sampling, TD update — is one
 lax.scan, so a full CartPole run takes seconds on CPU.
 
+The actor side is batched: ``cfg.num_envs`` independent environments
+step in lockstep (``VectorEnv``), every iteration writes a B-transition
+arc into the replay ring (`ReplayBuffer.add_batch`) and the samplers
+absorb the B priority writes as one batched scatter.  ``num_envs=1``
+reproduces the scalar pipeline exactly.  ``train_many`` vmaps the whole
+training run over a batch of seeds for sweep-style evaluation.
+
+Scheduling note: ``learn_start`` / ``train_every`` / ``target_sync`` /
+``eps_decay_steps`` count scan ITERATIONS, not frames — with B envs each
+iteration collects B frames, so one gradient step amortises over B
+transitions (the standard vectorized-actor replay ratio).
+
 PER uses importance-sampling weights; AMPER samples uniformly from its
 CSP (per the paper) so its weights are 1.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, NamedTuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.amper import AmperConfig, AmperSampler, UniformSampler
-from repro.core.per import CumsumPER, SumTreePER
 from repro.core.replay_buffer import ReplayBuffer
+from repro.core.samplers import make_sampler
 from repro.rl import envs as envs_mod
+
+RETURN_RING = 64  # completed-episode returns kept for the train metric
 
 
 @dataclasses.dataclass(frozen=True)
 class DQNConfig:
     env: str = "cartpole"
-    sampler: str = "per-sumtree"   # uniform | per-sumtree | per-cumsum |
-                                   # amper-fr | amper-k
+    sampler: str = "per-sumtree"   # any repro.core.samplers registry name
+    num_envs: int = 1
     replay_size: int = 2000
     batch: int = 64
     hidden: int = 128
@@ -68,40 +80,42 @@ def mlp_apply(params, x):
     return x
 
 
-def make_sampler(cfg: DQNConfig):
-    if cfg.sampler == "uniform":
-        return UniformSampler(cfg.replay_size)
-    if cfg.sampler == "per-sumtree":
-        return SumTreePER(cfg.replay_size)
-    if cfg.sampler == "per-cumsum":
-        return CumsumPER(cfg.replay_size)
-    variant = cfg.sampler.split("-")[1]
-    acfg = AmperConfig(
-        capacity=cfg.replay_size, m=cfg.amper_m, lam_fr=cfg.amper_lam_fr,
-        lam=cfg.amper_csp_ratio / 2.0, v_max=cfg.v_max,
-        csp_capacity=max(int(cfg.replay_size * cfg.amper_csp_ratio),
-                         cfg.batch),
-        knn_mode="bisect")
-    return AmperSampler(acfg, variant=variant)
-
-
 class AgentState(NamedTuple):
     params: Any
     target_params: Any
     opt_m: Any
     opt_v: Any
     buffer: Any
-    env_state: Any
-    obs: jax.Array
+    env_state: Any               # VectorEnv state, leaves lead with [num_envs]
+    obs: jax.Array               # float32[num_envs, obs_dim]
     step: jax.Array
-    episode_return: jax.Array
+    episode_return: jax.Array    # float32[num_envs] running returns
     last_returns: jax.Array      # ring buffer of completed episode returns
     n_episodes: jax.Array
 
 
-def make_dqn(cfg: DQNConfig):
+class DQN(NamedTuple):
+    """Everything `make_dqn` builds, by name (no positional unpacking)."""
+
+    init: Callable
+    agent_step: Callable
+    train: Callable          # (key, n_steps) -> (AgentState, metrics)
+    train_many: Callable     # (keys [S], n_steps) -> batched states/metrics
+    evaluate: Callable       # (AgentState, key, n_episodes) -> mean return
+    evaluate_many: Callable  # (batched states, keys [S], n_episodes) -> [S]
+
+
+def make_dqn(cfg: DQNConfig) -> DQN:
     env = envs_mod.ENVS[cfg.env]()
-    sampler = make_sampler(cfg)
+    venv = envs_mod.VectorEnv(env, cfg.num_envs)
+    # The completed-return ring must fit one iteration's worst case of
+    # num_envs simultaneous finishes, else slots collide within a scatter.
+    ring = max(RETURN_RING, cfg.num_envs)
+    sampler = make_sampler(
+        cfg.sampler, cfg.replay_size,
+        m=cfg.amper_m, lam_fr=cfg.amper_lam_fr,
+        csp_ratio=cfg.amper_csp_ratio, v_max=cfg.v_max,
+        min_csp=cfg.batch, knn_mode="bisect")
     is_per = cfg.sampler.startswith("per")
     rb = ReplayBuffer(cfg.replay_size, sampler, alpha=cfg.alpha,
                       beta=cfg.beta)
@@ -113,15 +127,15 @@ def make_dqn(cfg: DQNConfig):
         tr = {"obs": jnp.zeros(env.obs_dim), "action": jnp.int32(0),
               "reward": jnp.float32(0), "next_obs": jnp.zeros(env.obs_dim),
               "done": jnp.float32(0)}
-        env_state = env.reset(k2)
+        env_state = venv.reset(k2)
         return AgentState(
             params=params, target_params=params,
             opt_m=jax.tree.map(jnp.zeros_like, params),
             opt_v=jax.tree.map(jnp.zeros_like, params),
             buffer=rb.init(tr), env_state=env_state,
-            obs=env.obs(env_state), step=jnp.int32(0),
-            episode_return=jnp.float32(0),
-            last_returns=jnp.zeros(64), n_episodes=jnp.int32(0))
+            obs=venv.obs(env_state), step=jnp.int32(0),
+            episode_return=jnp.zeros(cfg.num_envs),
+            last_returns=jnp.zeros(ring), n_episodes=jnp.int32(0))
 
     def td_loss(params, target_params, batch, weights):
         q = mlp_apply(params, batch["obs"])
@@ -142,27 +156,32 @@ def make_dqn(cfg: DQNConfig):
         return params, m, v
 
     def agent_step(state: AgentState, key) -> tuple[AgentState, dict]:
-        k_act, k_env, k_sample, k_reset = jax.random.split(key, 4)
+        k_coin, k_rand, k_env, k_sample = jax.random.split(key, 4)
         eps = jnp.clip(
             cfg.eps_start + (cfg.eps_end - cfg.eps_start)
             * state.step / cfg.eps_decay_steps, cfg.eps_end, cfg.eps_start)
-        q = mlp_apply(state.params, state.obs)
-        greedy = jnp.argmax(q)
-        action = jnp.where(jax.random.uniform(k_act) < eps,
-                           jax.random.randint(k_act, (), 0, env.n_actions),
-                           greedy).astype(jnp.int32)
-        env_state, next_obs, reward, done = env.step(
-            state.env_state, action, k_reset)
-        buffer = rb.add(state.buffer, {
+        q = mlp_apply(state.params, state.obs)           # [B, n_actions]
+        greedy = jnp.argmax(q, axis=-1)
+        explore = jax.random.uniform(k_coin, (cfg.num_envs,)) < eps
+        randa = jax.random.randint(k_rand, (cfg.num_envs,), 0, env.n_actions)
+        action = jnp.where(explore, randa, greedy).astype(jnp.int32)
+        env_state, next_obs, reward, done = venv.step(
+            state.env_state, action, k_env)
+        done_f = done.astype(jnp.float32)
+        buffer = rb.add_batch(state.buffer, {
             "obs": state.obs, "action": action, "reward": reward,
-            "next_obs": next_obs, "done": done.astype(jnp.float32)})
+            "next_obs": next_obs, "done": done_f})
 
+        # Per-env episode accounting: each env that finished this step
+        # claims the next free slot of the shared completed-return ring
+        # (exclusive cumsum orders simultaneous finishes; non-finished envs
+        # aim out of range and are dropped by the scatter).
         ep_ret = state.episode_return + reward
-        last_returns = jnp.where(
-            done,
-            state.last_returns.at[state.n_episodes % 64].set(ep_ret),
-            state.last_returns)
-        n_episodes = state.n_episodes + done.astype(jnp.int32)
+        d = done.astype(jnp.int32)
+        slot = (state.n_episodes + jnp.cumsum(d) - d) % ring
+        last_returns = state.last_returns.at[
+            jnp.where(done, slot, ring)].set(ep_ret, mode="drop")
+        n_episodes = state.n_episodes + jnp.sum(d)
         episode_return = jnp.where(done, 0.0, ep_ret)
 
         def do_train(args):
@@ -185,23 +204,27 @@ def make_dqn(cfg: DQNConfig):
             lambda t, p: jnp.where(state.step % cfg.target_sync == 0, p, t),
             state.target_params, params)
 
-        obs = jnp.where(done, env.obs(env_state), next_obs)
         new = AgentState(params=params, target_params=target_params,
                          opt_m=m, opt_v=v, buffer=buffer,
-                         env_state=env_state, obs=env.obs(env_state),
+                         env_state=env_state, obs=venv.obs(env_state),
                          step=state.step + 1,
                          episode_return=episode_return,
                          last_returns=last_returns, n_episodes=n_episodes)
         metrics = {"return_mean": jnp.where(
-            n_episodes > 0, last_returns.sum() / jnp.minimum(n_episodes, 64), 0.0)}
+            n_episodes > 0,
+            last_returns.sum() / jnp.minimum(n_episodes, ring), 0.0)}
         return new, metrics
 
-    @functools.partial(jax.jit, static_argnames="n_steps")
-    def train(key, n_steps: int):
+    def _train(key, n_steps: int):
         state = init(key)
         keys = jax.random.split(jax.random.fold_in(key, 1), n_steps)
         state, metrics = jax.lax.scan(agent_step, state, keys)
         return state, metrics
+
+    train = jax.jit(_train, static_argnames="n_steps")
+    # Multi-seed sweep: one compiled program, seeds run data-parallel.
+    train_many = jax.jit(jax.vmap(_train, in_axes=(0, None)),
+                         static_argnames="n_steps")
 
     def evaluate(state: AgentState, key, n_episodes: int = 10) -> jax.Array:
         """Greedy-policy average return (the paper's 'test score')."""
@@ -228,4 +251,10 @@ def make_dqn(cfg: DQNConfig):
 
         return jax.vmap(one_ep)(jax.random.split(key, n_episodes)).mean()
 
-    return init, agent_step, train, evaluate
+    def evaluate_many(states, keys, n_episodes: int = 10) -> jax.Array:
+        """Per-seed test scores for a `train_many` output batch."""
+        return jax.vmap(lambda s, k: evaluate(s, k, n_episodes))(states, keys)
+
+    return DQN(init=init, agent_step=agent_step, train=train,
+               train_many=train_many, evaluate=evaluate,
+               evaluate_many=evaluate_many)

@@ -122,4 +122,37 @@ class Acrobot:
         return next_state, self.obs(nxt), reward, done
 
 
+class VectorEnv:
+    """B independent copies of a scalar env, vmapped (the actor front-end).
+
+    Wraps any env with the ``reset(key) / obs(state) / step(state, action,
+    key)`` contract.  State is the scalar env's state pytree with a leading
+    ``[num_envs]`` axis; ``step`` takes an ``int32[num_envs]`` action batch
+    and one key, which it splits into per-env auto-reset keys — so
+    ``VectorEnv(env, 1).step(s, a, k)`` is bit-identical to
+    ``env.step(s0, a0, jax.random.split(k, 1)[0])``.  Per-env episodes run
+    (and auto-reset) fully independently; everything stays jittable, so
+    the whole actor fan-out lives inside the training lax.scan.
+    """
+
+    def __init__(self, env, num_envs: int):
+        if num_envs < 1:
+            raise ValueError(f"num_envs must be >= 1, got {num_envs}")
+        self.env = env
+        self.num_envs = num_envs
+        self.obs_dim = env.obs_dim
+        self.n_actions = env.n_actions
+
+    def reset(self, key: jax.Array):
+        return jax.vmap(self.env.reset)(jax.random.split(key, self.num_envs))
+
+    def obs(self, state) -> jax.Array:
+        return jax.vmap(self.env.obs)(state)
+
+    def step(self, state, actions: jax.Array, key: jax.Array):
+        """-> (state, next_obs [B, obs_dim], reward [B], done [B])."""
+        keys = jax.random.split(key, self.num_envs)
+        return jax.vmap(self.env.step)(state, actions, keys)
+
+
 ENVS = {"cartpole": CartPole, "acrobot": Acrobot}

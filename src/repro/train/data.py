@@ -22,8 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.amper import AmperConfig, AmperSampler, UniformSampler
-from repro.core.per import CumsumPER
+from repro.core.samplers import make_sampler
 
 
 def corpus_tokens(n_seqs: int, seq_len: int, vocab: int, seed: int = 0) -> np.ndarray:
@@ -51,17 +50,9 @@ class PrioritizedSeqData:
         self.batch = batch
         self.alpha = alpha
         self.v_max = v_max
-        if sampler in ("amper-fr", "amper-k"):
-            cfg = AmperConfig(
-                capacity=self.n_seqs, m=m, lam_fr=lam_fr,
-                lam=csp_ratio / 2, v_max=v_max,
-                csp_capacity=max(int(self.n_seqs * csp_ratio), batch),
-                knn_mode="bisect")
-            self.sampler = AmperSampler(cfg, variant=sampler.split("-")[1])
-        elif sampler == "per":
-            self.sampler = CumsumPER(self.n_seqs)
-        else:
-            self.sampler = UniformSampler(self.n_seqs)
+        self.sampler = make_sampler(
+            sampler, self.n_seqs, m=m, lam_fr=lam_fr, csp_ratio=csp_ratio,
+            v_max=v_max, min_csp=batch, knn_mode="bisect")
 
     def init(self) -> ReplayDataState:
         st = self.sampler.init()

@@ -40,9 +40,9 @@ def test_dqn_learns_cartpole(sampler):
     trained agent beats the random policy by a wide margin."""
     cfg = DQNConfig(env="cartpole", sampler=sampler, replay_size=2000,
                     eps_decay_steps=3000, learn_start=200)
-    init, step, train, evaluate = make_dqn(cfg)
-    state, metrics = train(jax.random.key(0), 6000)
-    test_score = float(evaluate(state, jax.random.key(9), 10))
+    dqn = make_dqn(cfg)
+    state, metrics = dqn.train(jax.random.key(0), 6000)
+    test_score = float(dqn.evaluate(state, jax.random.key(9), 10))
     # random policy scores ~20 on CartPole; learned should far exceed
     assert test_score > 80, (sampler, test_score)
 
@@ -55,7 +55,7 @@ def test_amper_within_factor_of_per():
     for sampler in ("per-sumtree", "amper-fr"):
         cfg = DQNConfig(env="cartpole", sampler=sampler, replay_size=2000,
                         eps_decay_steps=3000, learn_start=200)
-        _, _, train, evaluate = make_dqn(cfg)
-        state, _ = train(jax.random.key(0), 6000)
-        scores[sampler] = float(evaluate(state, jax.random.key(9), 10))
+        dqn = make_dqn(cfg)
+        state, _ = dqn.train(jax.random.key(0), 6000)
+        scores[sampler] = float(dqn.evaluate(state, jax.random.key(9), 10))
     assert scores["amper-fr"] > 0.5 * scores["per-sumtree"], scores
