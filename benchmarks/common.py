@@ -1,6 +1,9 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
+import os
+import platform
 import time
 
 import jax
@@ -21,3 +24,41 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.2f},{derived}"
+
+
+def _jsonable(x):
+    """Recursively coerce benchmark rows (numpy/jax scalars, tuples) to
+    plain JSON types."""
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, (str, int, float, bool)) or x is None:
+        return x
+    if hasattr(x, "item"):  # numpy / jax scalars
+        return x.item()
+    return str(x)
+
+
+def write_bench_json(section: str, rows, out_dir: str = ".",
+                     **extra) -> str:
+    """Persist one benchmark section as machine-readable ``BENCH_*.json``.
+
+    The payload records the rows verbatim plus enough provenance (host,
+    backend, device count, unix time) to plot a perf trajectory across
+    commits.  Returns the written path.
+    """
+    payload = {
+        "section": section,
+        "unix_time": time.time(),
+        "host": platform.node(),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "rows": _jsonable(rows),
+        **_jsonable(extra),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{section}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path

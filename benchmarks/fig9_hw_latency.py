@@ -97,6 +97,7 @@ def main():
                       f"speedup_vs_paper_gpu={r['speedup_fr_vs_paper_gpu']:.0f}x"))
         print(csv_row(f"fig9/size{r['size']}/k", r["k_us"],
                       f"speedup_vs_paper_gpu={r['speedup_k_vs_paper_gpu']:.0f}x"))
+    return rows
 
 
 if __name__ == "__main__":

@@ -1,13 +1,21 @@
 """Benchmark harness: one module per paper table/figure.
 
-``python -m benchmarks.run [--quick]`` runs every benchmark and prints
-``name,us_per_call,derived`` CSV rows (plus human-readable logs).
-Roofline tables come from the dry-run artifacts: see benchmarks/roofline.py
-and EXPERIMENTS.md.
+``python -m benchmarks.run [--quick]`` runs every benchmark, prints
+``name,us_per_call,derived`` CSV rows (plus human-readable logs), and
+persists each section's rows as machine-readable ``BENCH_<section>.json``
+(see :func:`benchmarks.common.write_bench_json`) so the perf trajectory
+is recorded across commits.  Roofline tables come from the dry-run
+artifacts: see benchmarks/roofline.py and EXPERIMENTS.md.
+
+The ``sharded`` section runs in a subprocess: it must force 8 host
+devices via XLA_FLAGS before first jax init, which this parent process
+has already performed by the time the section runs.
 """
 from __future__ import annotations
 
 import argparse
+import os
+import subprocess
 import sys
 import traceback
 
@@ -17,20 +25,45 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes / fewer seeds")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig4,fig7,fig9,table1,samplers,venv")
+                    help="comma list: fig4,fig7,fig9,table1,samplers,venv,"
+                         "sharded")
+    ap.add_argument("--out", default=".",
+                    help="directory for the BENCH_*.json artifacts")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     failures = []
+    written = []
+
+    from benchmarks import common
 
     def section(name, fn):
         if only and name not in only:
             return
         print(f"\n=== {name} ===", flush=True)
         try:
-            fn()
+            rows = fn()
         except Exception:
             failures.append(name)
             traceback.print_exc()
+            return
+        if rows:
+            written.append(common.write_bench_json(name, rows,
+                                                   out_dir=args.out))
+
+    def sharded_subprocess():
+        """Fresh process so XLA_FLAGS can force the 8-device host mesh."""
+        json_path = os.path.join(args.out, "BENCH_sharded.json")
+        cmd = [sys.executable, "-m", "benchmarks.bench_sharded",
+               "--json", json_path] + (["--quick"] if args.quick else [])
+        out = subprocess.run(cmd, capture_output=True, text=True,
+                             timeout=1800, cwd=os.path.dirname(
+                                 os.path.dirname(os.path.abspath(__file__))))
+        print(out.stdout, end="")
+        if out.returncode != 0:
+            raise RuntimeError(f"bench_sharded failed:\n{out.stderr[-2000:]}")
+        if os.path.exists(json_path):
+            written.append(json_path)
+        return None  # the child already wrote its own json
 
     from benchmarks import (bench_samplers, bench_vector_env, fig4_latency,
                             fig7_sampling_error, fig9_hw_latency,
@@ -53,7 +86,10 @@ def main() -> None:
     section("venv", lambda: bench_vector_env.run(
         widths=(1, 16) if args.quick else (1, 4, 16, 64),
         steps=1000 if args.quick else 2000))
+    section("sharded", sharded_subprocess)
 
+    if written:
+        print(f"\nBENCH artifacts: {written}")
     if failures:
         print(f"\nFAILED sections: {failures}")
         sys.exit(1)

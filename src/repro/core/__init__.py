@@ -11,6 +11,7 @@ from repro.core.amper import (
 )
 from repro.core.per import CumsumPER, SumTreePER, importance_weights
 from repro.core.replay_buffer import ReplayBuffer, ReplayState
+from repro.core.sharded import ShardedAmperSampler, ShardedPERSampler
 from repro.core.samplers import (
     Sampler,
     available_samplers,
@@ -27,5 +28,6 @@ __all__ = [
     "build_csp_fr", "build_csp_k", "sample_from_csp",
     "CumsumPER", "SumTreePER", "importance_weights",
     "ReplayBuffer", "ReplayState",
+    "ShardedAmperSampler", "ShardedPERSampler",
     "Sampler", "available_samplers", "make_sampler", "register_sampler",
 ]

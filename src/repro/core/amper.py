@@ -44,8 +44,12 @@ class AmperConfig(NamedTuple):
         prefix-mask power-of-2 approximation (beyond-paper mode).
       knn_mode: "sort" (oracle top-N_i), "bisect" (radius bisection) or
         "hist" (shared cumulative histogram — 2 table passes).
-      fr_mode: "broadcast" ((m,N) compare, the faithful m-query search)
-        or "interval" (merged-interval stabbing, one table pass).
+      fr_mode: "broadcast" ((m,N) compare, the faithful m-query search),
+        "interval" (merged-interval stabbing, one table pass), "window"
+        (per-row neighbour-group gather, O(ceil(2*lam')) ops/row) or
+        "kernel" (fused Pallas multi-query kernel, one HBM pass;
+        interpret mode off-TPU).  All four produce bit-identical CSP
+        membership.
     """
 
     capacity: int
@@ -133,6 +137,8 @@ def build_csp_fr(pq: jax.Array, valid: jax.Array, key: jax.Array,
         non-zero priority.
       key: PRNG key for the group representatives.
     """
+    if cfg.fr_mode == "kernel":
+        return build_csp_fr_kernel(pq, valid, key, cfg)
     kv, kroll = jax.random.split(key)
     v_rep = group_representatives(kv, cfg)
     if cfg.fr_mode == "interval":

@@ -1,9 +1,17 @@
 """Functional experience-replay buffer (Fig. 1's ER memory).
 
 Stores an arbitrary transition pytree in a ring buffer with a pluggable
-priority sampler (uniform / PER sum-tree / PER cumsum / AMPER-k / AMPER-fr).
+priority sampler (uniform / PER sum-tree / PER cumsum / AMPER-k / AMPER-fr,
+or their mesh-sharded counterparts).
 Everything is pure and jit-able; the buffer state is a pytree that can be
 donated through a training step or sharded across a mesh.
+
+The buffer is mesh-aware through the sampler: when the sampler carries a
+``sharding`` (the ``*-sharded`` registry kinds expose a ``NamedSharding``
+over the capacity dim), every storage leaf is kept partitioned the same
+way, so transitions live on the shard that owns their priority row and the
+ring-arc ``add_batch`` scatter respects the shard layout (each shard writes
+only the arc slice it owns; no leaf is ever gathered to one device).
 
 New experiences enter with the current maximum priority (the standard PER
 convention: ensures every transition is replayed at least once); sampled
@@ -45,12 +53,22 @@ class ReplayBuffer:
         self.alpha = alpha
         self.beta = beta
         self.eps = eps
+        # Mesh-native samplers advertise the NamedSharding of their
+        # priority table; storage follows it on the capacity dim.
+        self.storage_sharding = getattr(sampler, "sharding", None)
+
+    def _constrain(self, storage: Any) -> Any:
+        if self.storage_sharding is None:
+            return storage
+        return jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(x, self.storage_sharding),
+            storage)
 
     def init(self, example_transition: Any) -> ReplayState:
-        storage = jax.tree.map(
+        storage = self._constrain(jax.tree.map(
             lambda x: jnp.zeros((self.capacity,) + jnp.shape(x), jnp.asarray(x).dtype),
             example_transition,
-        )
+        ))
         return ReplayState(
             storage=storage,
             sampler_state=self.sampler.init(),
@@ -79,9 +97,9 @@ class ReplayBuffer:
                 f"add_batch of {b} transitions exceeds capacity "
                 f"{self.capacity}: ring slots would collide within one write")
         idx = (state.pos + jnp.arange(b, dtype=jnp.int32)) % self.capacity
-        storage = jax.tree.map(
+        storage = self._constrain(jax.tree.map(
             lambda buf, x: buf.at[idx].set(x), state.storage, transitions
-        )
+        ))
         sampler_state = self.sampler.update(
             state.sampler_state, idx,
             jnp.broadcast_to(state.max_priority, (b,))

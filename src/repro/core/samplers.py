@@ -11,18 +11,28 @@ This module is that single seam:
   sample / priorities / total).  All concrete samplers already satisfy
   it; the protocol is ``runtime_checkable`` so tests can assert it.
 * :func:`register_sampler` — decorator adding a builder to the registry,
-  so new samplers (future PRs: rank-based PER, sharded AMPER fronts)
-  plug in without touching any call site.
+  so new samplers (future PRs: rank-based PER, multi-host replay
+  services) plug in without touching any call site.
 * :func:`make_sampler` — the registry-backed factory.  Builders accept
   one unified kwargs vocabulary and ignore hyper-parameters they don't
   consume, so a call site can forward its whole config dict regardless
   of which sampler the user picked.
 
+The sharded fronts promised by PR 1 exist: ``"amper-fr-sharded"`` and
+``"per-sharded"`` build :class:`repro.core.sharded.ShardedAmperSampler` /
+:class:`~repro.core.sharded.ShardedPERSampler`, whose priority tables live
+partitioned over a ``jax.sharding.Mesh`` (pass ``mesh=``; defaults to a
+1-D mesh over every visible device).  They satisfy the same protocol, so
+the replay buffer and the DQN agent use them unchanged.
+
 Shared kwargs vocabulary (all optional):
   m, lam_fr, csp_ratio, v_max, knn_mode, fr_mode, exact_radius,
   frac_bits  — AMPER hyper-parameters (Algorithm 1);
   csp_capacity — overrides the csp_ratio-derived CSP size;
-  min_csp      — floor for the derived CSP size (usually the train batch).
+  min_csp      — floor for the derived CSP size (usually the train batch);
+  mesh, axis_names, local_csp_capacity — sharded samplers only: the mesh
+  to partition the priority table over, which of its axes to use, and the
+  per-shard CSP buffer override.
 """
 from __future__ import annotations
 
@@ -123,17 +133,18 @@ def _build_cumsum(capacity: int, **_unused) -> Sampler:
     return CumsumPER(capacity)
 
 
-def _build_amper(variant: str, capacity: int, *, m: int = 20,
-                 lam_fr: float = 2.0, csp_ratio: float = 0.15,
-                 lam: float | None = None, v_max: float = 1.0,
-                 csp_capacity: int | None = None,
-                 min_csp: int = 64, knn_mode: str = "bisect",
-                 fr_mode: str = "broadcast", exact_radius: bool = False,
-                 frac_bits: int | None = None, **_unused) -> Sampler:
-    from repro.core.amper import AmperConfig, AmperSampler
+def _amper_config(capacity: int, *, m: int = 20,
+                  lam_fr: float = 2.0, csp_ratio: float = 0.15,
+                  lam: float | None = None, v_max: float = 1.0,
+                  csp_capacity: int | None = None,
+                  min_csp: int = 64, knn_mode: str = "bisect",
+                  fr_mode: str = "broadcast", exact_radius: bool = False,
+                  frac_bits: int | None = None, **_unused):
+    """The one place the unified kwargs vocabulary becomes an AmperConfig."""
+    from repro.core.amper import AmperConfig
     import repro.core.quantize as qz
 
-    cfg = AmperConfig(
+    return AmperConfig(
         capacity=capacity, m=m, lam_fr=lam_fr,
         lam=csp_ratio / 2.0 if lam is None else lam,
         v_max=v_max,
@@ -141,7 +152,12 @@ def _build_amper(variant: str, capacity: int, *, m: int = 20,
                       else max(int(capacity * csp_ratio), min_csp)),
         frac_bits=qz.DEFAULT_FRAC_BITS if frac_bits is None else frac_bits,
         knn_mode=knn_mode, fr_mode=fr_mode, exact_radius=exact_radius)
-    return AmperSampler(cfg, variant=variant)
+
+
+def _build_amper(variant: str, capacity: int, **kw) -> Sampler:
+    from repro.core.amper import AmperSampler
+
+    return AmperSampler(_amper_config(capacity, **kw), variant=variant)
 
 
 @register_sampler("amper-fr")
@@ -152,3 +168,30 @@ def _build_amper_fr(capacity: int, **kw) -> Sampler:
 @register_sampler("amper-k")
 def _build_amper_k(capacity: int, **kw) -> Sampler:
     return _build_amper("k", capacity, **kw)
+
+
+def _default_mesh():
+    """1-D mesh over every visible device (the zero-config sharded case)."""
+    return jax.make_mesh((jax.device_count(),), ("data",))
+
+
+@register_sampler("amper-fr-sharded")
+def _build_amper_fr_sharded(capacity: int, *, mesh=None,
+                            axis_names=("pod", "data"),
+                            local_csp_capacity: int | None = None,
+                            **kw) -> Sampler:
+    from repro.core.sharded import ShardedAmperSampler
+
+    return ShardedAmperSampler(
+        _amper_config(capacity, **kw), mesh if mesh is not None else _default_mesh(),
+        axis_names=axis_names, local_csp_capacity=local_csp_capacity)
+
+
+@register_sampler("per-sharded")
+def _build_per_sharded(capacity: int, *, mesh=None,
+                       axis_names=("pod", "data"), **_unused) -> Sampler:
+    from repro.core.sharded import ShardedPERSampler
+
+    return ShardedPERSampler(
+        capacity, mesh if mesh is not None else _default_mesh(),
+        axis_names=axis_names)

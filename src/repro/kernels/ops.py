@@ -23,6 +23,20 @@ def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _auto_block_rows(n: int) -> int:
+    """Largest sensible row-block for an n-element table.
+
+    Small tables (e.g. one shard of a sharded replay ring) would otherwise
+    pad to the full 64x128 default tile; capping the block at the table's
+    own row count keeps the padding (and the interpret-mode cost on CPU)
+    proportional to the input.  Rounded up to a multiple of 8 rows so the
+    (block_rows, 128) int32 block always satisfies Mosaic's (8, 128)
+    sublane tiling when the kernel really compiles on TPU.
+    """
+    rows = -(-n // LANES)
+    return min(_tm.DEFAULT_BLOCK_ROWS, max(8, 8 * (-(-rows // 8))))
+
+
 def _pad_table(pq: jax.Array, valid: jax.Array, block_rows: int):
     """Pad a flat int32 table to (R, 128) with R % block_rows == 0."""
     n = pq.shape[0]
@@ -36,10 +50,11 @@ def _pad_table(pq: jax.Array, valid: jax.Array, block_rows: int):
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def tcam_match(pq: jax.Array, query: jax.Array, mask: jax.Array, *,
-               block_rows: int = _tm.DEFAULT_BLOCK_ROWS,
+               block_rows: int | None = None,
                interpret: bool | None = None) -> jax.Array:
     """Single ternary-CAM query over a flat int32[n] table -> bool[n]."""
     interpret = _interpret_default() if interpret is None else interpret
+    block_rows = _auto_block_rows(pq.shape[0]) if block_rows is None else block_rows
     pq2, _, n = _pad_table(pq, jnp.ones_like(pq, jnp.bool_), block_rows)
     out = _tm.tcam_match(pq2, jnp.asarray(query, jnp.int32),
                          jnp.asarray(mask, jnp.int32),
@@ -50,7 +65,7 @@ def tcam_match(pq: jax.Array, query: jax.Array, mask: jax.Array, *,
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def multi_query_match(pq: jax.Array, valid: jax.Array, lo: jax.Array,
                       hi: jax.Array, *,
-                      block_rows: int = _tm.DEFAULT_BLOCK_ROWS,
+                      block_rows: int | None = None,
                       interpret: bool | None = None):
     """Fused m-range AMPER search over a flat table.
 
@@ -58,6 +73,7 @@ def multi_query_match(pq: jax.Array, valid: jax.Array, lo: jax.Array,
     (matches no non-negative range) and valid = False.
     """
     interpret = _interpret_default() if interpret is None else interpret
+    block_rows = _auto_block_rows(pq.shape[0]) if block_rows is None else block_rows
     pq2, valid2, n = _pad_table(pq, valid, block_rows)
     sel, counts = _tm.multi_query_match(
         pq2, valid2, lo.astype(jnp.int32), hi.astype(jnp.int32),

@@ -22,3 +22,21 @@ def make_debug_mesh(n_devices: int | None = None,
     """Small mesh over whatever devices exist (tests, examples)."""
     n = n_devices or len(jax.devices())
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def make_replay_mesh(n_shards: int | None = None) -> jax.sharding.Mesh:
+    """1-D ``("data",)`` mesh for the sharded replay subsystem.
+
+    ``n_shards`` defaults to every visible device; an explicit smaller
+    value builds the mesh over a device prefix, which is how the sharded
+    benchmarks sweep shard counts inside one process (XLA_FLAGS must have
+    forced enough host devices before first jax init).
+    """
+    import numpy as np
+
+    devices = jax.devices()
+    n = n_shards or len(devices)
+    if n > len(devices):
+        raise ValueError(f"requested {n} shards but only "
+                         f"{len(devices)} devices exist")
+    return jax.sharding.Mesh(np.asarray(devices[:n]), ("data",))

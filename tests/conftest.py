@@ -1,5 +1,30 @@
-import pytest
+"""Suite-wide configuration.
+
+The host-device override MUST happen here, before any module imports
+jax: XLA reads XLA_FLAGS at first backend init, so setting it inside a
+test file is import-order fragile (anything importing jax earlier wins).
+With 8 forced host devices every test sees the same topology and the
+sharded-replay suite runs real multi-device meshes in-process instead of
+via subprocesses.
+"""
+import os
+
+if "host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8").strip()
+
+import pytest  # noqa: E402
 
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+
+
+@pytest.fixture(scope="session")
+def mesh():
+    """2x4 ("pod", "data") mesh over the 8 forced host devices."""
+    import jax
+
+    if jax.device_count() < 8:
+        pytest.skip("needs 8 devices (XLA_FLAGS was set before jax init?)")
+    return jax.make_mesh((2, 4), ("pod", "data"))

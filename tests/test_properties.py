@@ -73,6 +73,53 @@ def test_cumsum_sampler_in_support(ps, seed):
     assert bool(jnp.all((idx >= 0) & (idx < n)))
 
 
+@settings(max_examples=80, deadline=None)
+@given(st.integers(0, MAXQ), st.integers(0, MAXQ), st.integers(0, MAXQ))
+def test_prefix_mask_range_match_mutual_consistency(value, query, delta):
+    """prefix_mask / prefix_range / ternary_match agree for INDEPENDENT
+    (query, delta): a row matches iff it lies in [lo, hi]; the query
+    itself always lies in its own block; the block is exactly the
+    mask-aligned interval of width mask+1."""
+    mask = qz.prefix_mask(jnp.int32(delta))
+    lo, hi = qz.prefix_range(jnp.int32(query), mask)
+    lo_i, hi_i, m_i = int(lo), int(hi), int(mask)
+    assert lo_i <= query <= hi_i, "query escaped its own prefix block"
+    assert hi_i - lo_i == m_i, "block width != mask span"
+    assert lo_i & m_i == 0, "block not aligned to the mask"
+    matched = bool(qz.ternary_match(jnp.int32(value), jnp.int32(query), mask))
+    assert matched == (lo_i <= value <= hi_i)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.0, 20.0), st.floats(0.0, 20.0), st.floats(0.01, 10.0))
+def test_quantize_monotone(p1, p2, v_max):
+    """p1 <= p2  ->  q(p1) <= q(p2) (clipping and rounding included)."""
+    lo_p, hi_p = min(p1, p2), max(p1, p2)
+    assert int(qz.quantize(jnp.float32(lo_p), v_max)) <= \
+        int(qz.quantize(jnp.float32(hi_p), v_max))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, MAXQ), st.floats(0.01, 10.0))
+def test_top_code_inside_prefix_block(delta, v_max):
+    """quantize() docstring invariant: saturation lands AT or just below
+    the all-ones code 2^frac-1 — never one past it — so the prefix block
+    anchored at the ceiling always ends exactly at 2^frac-1 and
+    v_max-clipped priorities stay matchable by top-block queries."""
+    top = int(qz.quantize(jnp.float32(10 * v_max), v_max))
+    # float32 scale rounding may shave <=2 codes, but never exceeds MAXQ
+    # (exceeding it is the unmatchable / inverted-prioritization failure)
+    assert MAXQ - 2 <= top <= MAXQ
+    mask = qz.prefix_mask(jnp.int32(delta))
+    lo, hi = qz.prefix_range(jnp.int32(MAXQ), mask)
+    assert int(hi) == MAXQ, "ceiling block fell past the all-ones code"
+    assert 0 <= int(lo) <= MAXQ
+    # a saturated stored row matches the ceiling query whenever the radius
+    # covers the fp shave (mask >= 3 here covers the <=2-code slack)
+    if int(mask) >= 3:
+        assert bool(qz.ternary_match(jnp.int32(top), jnp.int32(MAXQ), mask))
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(2, 12), st.floats(0.2, 4.0), st.integers(0, 10_000))
 def test_csp_members_within_prefix_blocks(m, lam_fr, seed):

@@ -90,43 +90,34 @@ def test_microbatched_train_step_matches():
 
 
 @pytest.mark.slow
-def test_sharded_amper_multi_device():
+def test_sharded_amper_multi_device(mesh):
     """shard_map AMPER on 8 host devices: prioritization + index validity.
 
-    Runs in a subprocess because it needs XLA_FLAGS set before jax init.
+    Runs in-process on the shared mesh fixture (conftest.py forces the 8
+    host devices before any jax import, so no subprocess dance is needed).
     """
-    code = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import PartitionSpec as P, NamedSharding
-from repro.core.amper import AmperConfig
-from repro.core import sharded
-import repro.core.quantize as qz
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.core.amper import AmperConfig
+    from repro.core import sharded
+    import repro.core.quantize as qz
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"))
-N = 8192
-cfg = AmperConfig(capacity=N, m=8, lam_fr=2.0, v_max=1.0, csp_capacity=2048)
-p = jax.random.uniform(jax.random.key(1), (N,))
-sh = NamedSharding(mesh, P(("pod", "data")))
-pq_s = jax.device_put(qz.quantize(p, 1.0), sh)
-valid_s = jax.device_put(jnp.ones(N, bool), sh)
-fn = jax.jit(sharded.sharded_sample_fr(mesh, cfg, 2048))
-idx = fn(pq_s, valid_s, jax.random.key(3))
-assert idx.shape == (2048,)
-assert int(idx.min()) >= 0 and int(idx.max()) < N
-sampled_mean = float(p[idx].mean())
-assert sampled_mean > float(p.mean()) + 0.02, sampled_mean
-# PER contrast baseline
-fn2 = jax.jit(sharded.sharded_sample_per(mesh, 2048))
-idx2 = fn2(jax.device_put(p, sh), jax.random.key(3))
-assert float(p[idx2].mean()) > float(p.mean()) + 0.1
-print("OK")
-"""
-    out = subprocess.run([sys.executable, "-c", code], env=ENV, cwd=REPO,
-                         capture_output=True, text=True, timeout=600)
-    assert out.returncode == 0, out.stderr[-2000:]
-    assert "OK" in out.stdout
+    N = 8192
+    cfg = AmperConfig(capacity=N, m=8, lam_fr=2.0, v_max=1.0,
+                      csp_capacity=2048)
+    p = jax.random.uniform(jax.random.key(1), (N,))
+    sh = NamedSharding(mesh, P(("pod", "data")))
+    pq_s = jax.device_put(qz.quantize(p, 1.0), sh)
+    valid_s = jax.device_put(jnp.ones(N, bool), sh)
+    fn = jax.jit(sharded.sharded_sample_fr(mesh, cfg, 2048))
+    idx = fn(pq_s, valid_s, jax.random.key(3))
+    assert idx.shape == (2048,)
+    assert int(idx.min()) >= 0 and int(idx.max()) < N
+    sampled_mean = float(p[idx].mean())
+    assert sampled_mean > float(p.mean()) + 0.02, sampled_mean
+    # PER contrast baseline
+    fn2 = jax.jit(sharded.sharded_sample_per(mesh, 2048))
+    idx2 = fn2(jax.device_put(p, sh), jax.random.key(3))
+    assert float(p[idx2].mean()) > float(p.mean()) + 0.1
 
 
 @pytest.mark.slow
