@@ -1,0 +1,117 @@
+"""Async runtime throughput: learner steps/sec, sync vs async, per sampler.
+
+For each sampler the benchmark trains the same CartPole config two ways
+through `ReplayService` — the strict synchronous loop (actor step,
+sample, learn, priority write serialized, exactly the scan trainer's
+iteration) and the async pipeline (actors / prefetched sampling /
+learner / deferred priority feedback overlapped) — and reports median
+learner steps/sec over interleaved trials (interleaved so host noise
+hits both modes equally).  The claim under test: overlapping hides the
+sampler's host latency behind the TD update, so async sustains >= 1.5x
+the synchronous learner rate at 16 envs on CPU.
+
+Each row also prints the measured host per-batch sampling latency next
+to the *modeled* AM-hardware latency from `repro.core.hwmodel` (Table 2
+component latencies): the ratio is the paper's 55–270x Fig. 9 claim as
+a roofline column — how much sampling headroom a TCAM back-end would
+add to exactly this pipeline.
+"""
+from __future__ import annotations
+
+import argparse
+import statistics
+
+import jax
+
+from benchmarks.common import csv_row, time_fn
+from repro.core import hwmodel
+from repro.rl.dqn import DQNConfig
+from repro.runtime import ReplayService
+
+
+def _am_model_us(cfg: DQNConfig, sampler: str) -> float:
+    """Modeled AM-hardware sampling latency (us) for one batch draw."""
+    hw = hwmodel.HwConfig(er_size=cfg.replay_size, m=cfg.amper_m,
+                          csp_ratio=cfg.amper_csp_ratio, batch=cfg.batch)
+    ns = (hwmodel.latency_k_ns(hw) if sampler == "amper-k"
+          else hwmodel.latency_fr_ns(hw))
+    return ns / 1e3
+
+
+def run(env: str = "cartpole",
+        samplers=("per-sumtree", "amper-fr"), num_envs: int = 16,
+        steps: int = 400, trials: int = 3, replay: int = 4000,
+        verbose: bool = True):
+    rows = []
+    key = jax.random.key(0)
+    for sampler in samplers:
+        cfg = DQNConfig(env=env, sampler=sampler, num_envs=num_envs,
+                        replay_size=replay, batch=64, learn_start=50,
+                        eps_decay_steps=10 * steps, target_sync=100,
+                        v_max=8.0)
+        sv = ReplayService(cfg, sync=True, num_actors=1)
+        sa = ReplayService(cfg, num_actors=1, chunk_len=32, slab=8,
+                           max_replay_ratio=num_envs)
+        sv.run(key, cfg.learn_start + 10)      # compile warmup
+        last = sa.run(key, 16)
+        sync_t, async_t = [], []
+        for _ in range(trials):
+            sync_t.append(sv.run(key, steps + cfg.learn_start)
+                          .metrics["learner_steps_per_sec"])
+            last = sa.run(key, steps)
+            async_t.append(last.metrics["learner_steps_per_sec"])
+        sync_sps = statistics.median(sync_t)
+        async_sps = statistics.median(async_t)
+        # host per-batch sampling latency on the warm buffer vs the
+        # AM-hardware analytical model — the printed roofline column
+        rb = sa.dqn.replay
+        sample_j = jax.jit(lambda s, k: rb.sample(s, k, cfg.batch)[0])
+        host_us = time_fn(sample_j, last.buffer, key)
+        model_us = _am_model_us(cfg, sampler)
+        row = {
+            "sampler": sampler, "num_envs": num_envs,
+            "sync_steps_per_sec": sync_sps,
+            "async_steps_per_sec": async_sps,
+            "speedup": async_sps / sync_sps,
+            "staleness_mean": last.metrics["staleness"]["mean"],
+            "host_sample_us": host_us,
+            "am_model_us": model_us,
+            "am_roofline_x": host_us / model_us,
+        }
+        rows.append(row)
+        if verbose:
+            print(f"runtime {env}/{sampler:12s} "
+                  f"sync={sync_sps:7.0f}/s async={async_sps:7.0f}/s "
+                  f"({row['speedup']:4.2f}x)  "
+                  f"host_sample={host_us:8.1f}us  "
+                  f"AM_model={model_us:6.2f}us  "
+                  f"roofline={row['am_roofline_x']:6.0f}x")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--env", default="cartpole")
+    ap.add_argument("--samplers", default="per-sumtree,amper-fr")
+    ap.add_argument("--num-envs", type=int, default=16)
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--trials", type=int, default=3)
+    args = ap.parse_args()
+    rows = run(args.env, tuple(args.samplers.split(",")),
+               num_envs=args.num_envs, steps=args.steps,
+               trials=args.trials)
+    for r in rows:
+        print(csv_row(
+            f"runtime/{args.env}/{r['sampler']}/B{r['num_envs']}",
+            1e6 / r["async_steps_per_sec"],
+            f"sync_sps={r['sync_steps_per_sec']:.0f};"
+            f"async_sps={r['async_steps_per_sec']:.0f};"
+            f"speedup={r['speedup']:.2f};"
+            f"am_roofline_x={r['am_roofline_x']:.0f}"))
+    # Acceptance: async >= 1.5x learner steps/sec at 16 envs on CPU.
+    for r in rows:
+        assert r["speedup"] >= 1.5, (r["sampler"], r["speedup"])
+
+
+if __name__ == "__main__":
+    main()

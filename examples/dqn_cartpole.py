@@ -15,10 +15,11 @@ import time
 import jax
 
 from repro.rl.dqn import DQNConfig, make_dqn
+from repro.rl.envs import available_envs
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=6000)
-ap.add_argument("--env", default="cartpole", choices=["cartpole", "acrobot"])
+ap.add_argument("--env", default="cartpole", choices=available_envs())
 ap.add_argument("--num-envs", type=int, default=1,
                 help="parallel environments per iteration")
 ap.add_argument("--replay", type=int, default=2000)

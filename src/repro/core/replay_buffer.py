@@ -17,6 +17,14 @@ New experiences enter with the current maximum priority (the standard PER
 convention: ensures every transition is replayed at least once); sampled
 transitions get their priority rewritten from the fresh TD error after the
 train step — the store / sample / update cycle of Fig. 1.
+
+For the async runtime (:mod:`repro.runtime`) the buffer additionally
+tracks a per-slot *write stamp* (the global add counter at the slot's
+last write).  A deferred priority update that arrives after the slot was
+recycled by newer experience must not clobber the newcomer's priority;
+passing the sample-time stamps to :meth:`ReplayBuffer.update_priorities`
+turns it into an out-of-band write that silently drops exactly those
+stale rows.
 """
 from __future__ import annotations
 
@@ -26,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.per import importance_weights
+from repro.core.samplers import masked_update
 
 
 class ReplayState(NamedTuple):
@@ -34,6 +43,9 @@ class ReplayState(NamedTuple):
     pos: jax.Array        # int32 next write slot
     size: jax.Array       # int32 live count
     max_priority: jax.Array  # float32 running max (for new entries)
+    write_stamp: jax.Array   # int32[capacity] global add counter at last
+    #                          write of each slot (-1 = never written)
+    total_adds: jax.Array    # int32 transitions ever written
 
 
 class ReplayBuffer:
@@ -75,6 +87,9 @@ class ReplayBuffer:
             pos=jnp.int32(0),
             size=jnp.int32(0),
             max_priority=jnp.float32(1.0),
+            write_stamp=self._constrain(
+                jnp.full((self.capacity,), -1, jnp.int32)),
+            total_adds=jnp.int32(0),
         )
 
     def add(self, state: ReplayState, transition: Any) -> ReplayState:
@@ -104,13 +119,29 @@ class ReplayBuffer:
             state.sampler_state, idx,
             jnp.broadcast_to(state.max_priority, (b,))
         )
+        stamps = state.total_adds + jnp.arange(b, dtype=jnp.int32)
         return ReplayState(
             storage=storage,
             sampler_state=sampler_state,
             pos=(state.pos + b) % self.capacity,
             size=jnp.minimum(state.size + b, self.capacity),
             max_priority=state.max_priority,
+            write_stamp=self._constrain(state.write_stamp.at[idx].set(stamps)),
+            total_adds=state.total_adds + b,
         )
+
+    def add_block(self, state: ReplayState, block: Any) -> ReplayState:
+        """Store a ``[T, B, ...]`` rollout block in chronological order.
+
+        This is the runtime's block-enqueue entry point: an actor hands
+        over a whole chunk of T vectorized steps at once, and the flatten
+        preserves time-major order so the ring arc matches T sequential
+        ``add_batch`` calls exactly.
+        """
+        t, b = jax.tree.leaves(block)[0].shape[:2]
+        flat = jax.tree.map(
+            lambda x: x.reshape((t * b,) + x.shape[2:]), block)
+        return self.add_batch(state, flat)
 
     def sample(self, state: ReplayState, key: jax.Array, batch: int):
         """Returns (indices, transitions, is_weights)."""
@@ -121,12 +152,31 @@ class ReplayBuffer:
                                self.beta)
         return idx, batch_tree, w
 
+    def stamps(self, state: ReplayState, idx: jax.Array) -> jax.Array:
+        """Write stamps of ``idx`` at sample time (pass back to
+        :meth:`update_priorities` for a stale-safe deferred update)."""
+        return state.write_stamp[idx]
+
     def update_priorities(self, state: ReplayState, idx: jax.Array,
-                          td_error: jax.Array) -> ReplayState:
-        """Rewrite priorities from fresh TD errors (Sec. 3.4.3: plain write)."""
+                          td_error: jax.Array,
+                          stamp: jax.Array | None = None) -> ReplayState:
+        """Rewrite priorities from fresh TD errors (Sec. 3.4.3: plain write).
+
+        With ``stamp`` (the :meth:`stamps` captured when the batch was
+        sampled) this becomes the runtime's out-of-band entry point: rows
+        whose slot has been overwritten by newer experience since the
+        sample are dropped instead of clobbering the newcomer's priority.
+        """
         p = (jnp.abs(td_error) + self.eps) ** self.alpha
-        sampler_state = self.sampler.update(state.sampler_state, idx, p)
+        if stamp is None:
+            sampler_state = self.sampler.update(state.sampler_state, idx, p)
+            p_max = jnp.max(p)
+        else:
+            valid = state.write_stamp[idx] == stamp
+            sampler_state = masked_update(
+                self.sampler, state.sampler_state, idx, p, valid)
+            p_max = jnp.max(jnp.where(valid, p, 0.0))
         return state._replace(
             sampler_state=sampler_state,
-            max_priority=jnp.maximum(state.max_priority, jnp.max(p)),
+            max_priority=jnp.maximum(state.max_priority, p_max),
         )

@@ -71,6 +71,36 @@ class Sampler(Protocol):
         ...
 
 
+def masked_update(sampler: Sampler, state: Any, idx: jax.Array,
+                  priority: jax.Array, valid: jax.Array) -> Any:
+    """Out-of-band (deferred) priority write for any registry sampler.
+
+    Rows with ``valid[i] == False`` are rewritten with their *current*
+    priority — a no-op write — so a stale deferred update (the slot was
+    recycled between sample and feedback) never clobbers fresh state.
+
+    ``idx`` may contain duplicates (priority sampling draws with
+    replacement): every occurrence of a row is rewritten with the value
+    of that row's last VALID occurrence (its current priority if none is
+    valid), so all duplicate scatter writes carry identical values and
+    the scatter's winner is irrelevant — sequential last-write-wins
+    semantics on every backend, without requiring the protocol's
+    distinct-indices contract.
+    """
+    import jax.numpy as jnp
+
+    prios = sampler.priorities(state)
+    rank = jnp.arange(1, idx.shape[0] + 1, dtype=jnp.int32)
+    last_valid = jnp.zeros(prios.shape[0], jnp.int32).at[idx].max(
+        jnp.where(valid, rank, 0))
+    winner = last_valid[idx]  # per position: rank of its row's winner
+    value = jnp.where(
+        winner > 0,
+        priority.astype(jnp.float32)[jnp.maximum(winner - 1, 0)],
+        prios[idx])
+    return sampler.update(state, idx, value)
+
+
 _REGISTRY: dict[str, Callable[..., Sampler]] = {}
 
 

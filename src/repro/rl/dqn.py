@@ -95,18 +95,32 @@ class AgentState(NamedTuple):
 
 
 class DQN(NamedTuple):
-    """Everything `make_dqn` builds, by name (no positional unpacking)."""
+    """Everything `make_dqn` builds, by name (no positional unpacking).
+
+    ``act`` / ``learn`` are the pieces the async runtime
+    (:mod:`repro.runtime`) composes into overlapped pipeline stages;
+    ``agent_step`` is the same two pieces fused into one synchronous
+    iteration, and ``train`` wraps that in a lax.scan.
+    """
 
     init: Callable
     agent_step: Callable
     train: Callable          # (key, n_steps) -> (AgentState, metrics)
     train_many: Callable     # (keys [S], n_steps) -> batched states/metrics
-    evaluate: Callable       # (AgentState, key, n_episodes) -> mean return
+    evaluate: Callable       # (params/AgentState, key, n_episodes) -> return
     evaluate_many: Callable  # (batched states, keys [S], n_episodes) -> [S]
+    act: Callable            # (params, env_state, obs, step, key)
+    #                          -> (env_state, next_obs, transitions)
+    learn: Callable          # (params, target, m, v, step, batch, weights)
+    #                          -> (params, m, v, td, loss)
+    cfg: DQNConfig
+    env: Any                 # scalar env instance
+    venv: Any                # VectorEnv over cfg.num_envs copies
+    replay: Any              # the ReplayBuffer (sampler attached)
 
 
 def make_dqn(cfg: DQNConfig) -> DQN:
-    env = envs_mod.ENVS[cfg.env]()
+    env = envs_mod.make_env(cfg.env)
     venv = envs_mod.VectorEnv(env, cfg.num_envs)
     # The completed-return ring must fit one iteration's worst case of
     # num_envs simultaneous finishes, else slots collide within a scatter.
@@ -155,22 +169,44 @@ def make_dqn(cfg: DQNConfig) -> DQN:
             lambda p, mm, vv: p - lr * mm / (jnp.sqrt(vv) + eps), params, m, v)
         return params, m, v
 
-    def agent_step(state: AgentState, key) -> tuple[AgentState, dict]:
-        k_coin, k_rand, k_env, k_sample = jax.random.split(key, 4)
+    def act(params, env_state, obs, step, key):
+        """One vectorized epsilon-greedy env step (the actor piece).
+
+        Returns ``(env_state, next_obs, transitions)`` where ``next_obs``
+        is the post-auto-reset observation the policy acts on next and
+        ``transitions`` is the B-row pytree to store (its ``next_obs``
+        field keeps the pre-reset observation the TD target needs).
+        """
+        k_coin, k_rand, k_env = jax.random.split(key, 3)
         eps = jnp.clip(
             cfg.eps_start + (cfg.eps_end - cfg.eps_start)
-            * state.step / cfg.eps_decay_steps, cfg.eps_end, cfg.eps_start)
-        q = mlp_apply(state.params, state.obs)           # [B, n_actions]
+            * step / cfg.eps_decay_steps, cfg.eps_end, cfg.eps_start)
+        q = mlp_apply(params, obs)                       # [B, n_actions]
         greedy = jnp.argmax(q, axis=-1)
         explore = jax.random.uniform(k_coin, (cfg.num_envs,)) < eps
         randa = jax.random.randint(k_rand, (cfg.num_envs,), 0, env.n_actions)
         action = jnp.where(explore, randa, greedy).astype(jnp.int32)
-        env_state, next_obs, reward, done = venv.step(
-            state.env_state, action, k_env)
-        done_f = done.astype(jnp.float32)
-        buffer = rb.add_batch(state.buffer, {
-            "obs": state.obs, "action": action, "reward": reward,
-            "next_obs": next_obs, "done": done_f})
+        env_state, next_obs, reward, done = venv.step(env_state, action, k_env)
+        transitions = {
+            "obs": obs, "action": action, "reward": reward,
+            "next_obs": next_obs, "done": done.astype(jnp.float32)}
+        return env_state, venv.obs(env_state), transitions
+
+    def learn(params, target_params, opt_m, opt_v, step, batch, weights):
+        """One TD gradient step on a sampled batch (the learner piece)."""
+        w = weights if is_per else jnp.ones_like(weights)
+        (loss, td), grads = jax.value_and_grad(
+            td_loss, has_aux=True)(params, target_params, batch, w)
+        params, m, v = adam(params, grads, opt_m, opt_v, step)
+        return params, m, v, td, loss
+
+    def agent_step(state: AgentState, key) -> tuple[AgentState, dict]:
+        k_act, k_sample = jax.random.split(key)
+        env_state, obs_next, transitions = act(
+            state.params, state.env_state, state.obs, state.step, k_act)
+        reward = transitions["reward"]
+        done = transitions["done"] > 0.5
+        buffer = rb.add_batch(state.buffer, transitions)
 
         # Per-env episode accounting: each env that finished this step
         # claims the next free slot of the shared completed-return ring
@@ -187,11 +223,8 @@ def make_dqn(cfg: DQNConfig) -> DQN:
         def do_train(args):
             params, m, v, buffer = args
             idx, batch, w = rb.sample(buffer, k_sample, cfg.batch)
-            if not is_per:
-                w = jnp.ones_like(w)
-            (loss, td), grads = jax.value_and_grad(
-                td_loss, has_aux=True)(params, state.target_params, batch, w)
-            params, m, v = adam(params, grads, m, v, state.step)
+            params, m, v, td, _ = learn(
+                params, state.target_params, m, v, state.step, batch, w)
             buffer = rb.update_priorities(buffer, idx, td)
             return params, m, v, buffer
 
@@ -206,7 +239,7 @@ def make_dqn(cfg: DQNConfig) -> DQN:
 
         new = AgentState(params=params, target_params=target_params,
                          opt_m=m, opt_v=v, buffer=buffer,
-                         env_state=env_state, obs=venv.obs(env_state),
+                         env_state=env_state, obs=obs_next,
                          step=state.step + 1,
                          episode_return=episode_return,
                          last_returns=last_returns, n_episodes=n_episodes)
@@ -226,8 +259,15 @@ def make_dqn(cfg: DQNConfig) -> DQN:
     train_many = jax.jit(jax.vmap(_train, in_axes=(0, None)),
                          static_argnames="n_steps")
 
-    def evaluate(state: AgentState, key, n_episodes: int = 10) -> jax.Array:
-        """Greedy-policy average return (the paper's 'test score')."""
+    def evaluate(state, key, n_episodes: int = 10) -> jax.Array:
+        """Greedy-policy average return (the paper's 'test score').
+
+        Accepts a full :class:`AgentState` or bare network params (what
+        the async runtime's :class:`~repro.runtime.service.RunResult`
+        carries).
+        """
+        params = state.params if hasattr(state, "params") else state
+
         def one_ep(key):
             k0, key = jax.random.split(key)
             env_state = env.reset(k0)
@@ -235,7 +275,7 @@ def make_dqn(cfg: DQNConfig) -> DQN:
             def body(carry):
                 env_state, obs, ret, done, key = carry
                 key, k = jax.random.split(key)
-                action = jnp.argmax(mlp_apply(state.params, obs)).astype(jnp.int32)
+                action = jnp.argmax(mlp_apply(params, obs)).astype(jnp.int32)
                 env_state, obs2, r, d = env.step(env_state, action, k)
                 return (env_state, env.obs(env_state), ret + r * (1 - done),
                         jnp.maximum(done, d.astype(jnp.float32)), key)
@@ -257,4 +297,5 @@ def make_dqn(cfg: DQNConfig) -> DQN:
 
     return DQN(init=init, agent_step=agent_step, train=train,
                train_many=train_many, evaluate=evaluate,
-               evaluate_many=evaluate_many)
+               evaluate_many=evaluate_many, act=act, learn=learn,
+               cfg=cfg, env=env, venv=venv, replay=rb)

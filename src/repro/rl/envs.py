@@ -10,10 +10,40 @@ with auto-reset on termination (returns the fresh state and marks done).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+_ENV_REGISTRY: dict[str, Callable[[], Any]] = {}
+
+
+def register_env(name: str, *aliases: str):
+    """Decorator: register an env class under ``name`` (plus aliases) so the
+    runtime, examples, and benchmarks can select environments by string.
+    Re-registration replaces — last wins — mirroring the sampler registry."""
+
+    def deco(cls):
+        for n in (name, *aliases):
+            _ENV_REGISTRY[n] = cls
+        return cls
+
+    return deco
+
+
+def available_envs() -> list[str]:
+    return sorted(_ENV_REGISTRY)
+
+
+def make_env(name: str):
+    """Build an environment instance by registry name."""
+    try:
+        cls = _ENV_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown env: {name!r} (available: {available_envs()})"
+        ) from None
+    return cls()
 
 
 class EnvState(NamedTuple):
@@ -21,6 +51,7 @@ class EnvState(NamedTuple):
     t: jax.Array        # steps in current episode
 
 
+@register_env("cartpole")
 class CartPole:
     """CartPole-v1: keep the pole upright; +1 per step; 500-step cap."""
 
@@ -59,6 +90,7 @@ class CartPole:
         return next_state, EnvState(x=new, t=t).x, reward, done
 
 
+@register_env("acrobot")
 class Acrobot:
     """Acrobot-v1: swing the tip above the bar; -1 per step until solved."""
 
@@ -155,4 +187,5 @@ class VectorEnv:
         return jax.vmap(self.env.step)(state, actions, keys)
 
 
-ENVS = {"cartpole": CartPole, "acrobot": Acrobot}
+# Back-compat alias for pre-registry call sites; prefer `make_env`.
+ENVS = _ENV_REGISTRY

@@ -1,0 +1,20 @@
+"""Asynchronous actor–learner replay runtime.
+
+Decouples experience generation (:mod:`~repro.runtime.actor`), priority
+sampling (:mod:`~repro.runtime.pipeline`), and learning
+(:mod:`~repro.runtime.learner`) into overlapped pipeline stages behind
+the :class:`~repro.runtime.service.ReplayService` façade.  This is the
+layer where AMPER-vs-PER sampling latency becomes visible as end-to-end
+learner steps/sec instead of a microbenchmark.
+"""
+from repro.runtime.actor import ActorPool, TransitionBlock, make_rollout
+from repro.runtime.learner import Feedback, Learner, make_slab_learner
+from repro.runtime.pipeline import (BatchSlab, PrefetchPipeline,
+                                    make_slab_sampler)
+from repro.runtime.service import ReplayService, RunResult
+
+__all__ = [
+    "ActorPool", "BatchSlab", "Feedback", "Learner", "PrefetchPipeline",
+    "ReplayService", "RunResult", "TransitionBlock", "make_rollout",
+    "make_slab_learner", "make_slab_sampler",
+]

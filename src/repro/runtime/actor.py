@@ -1,0 +1,162 @@
+"""Host-thread actor pool driving jitted ``VectorEnv`` rollout chunks.
+
+Each actor owns an independent ``VectorEnv`` state (its own reset key,
+its own episode accounting) and repeatedly runs one jitted rollout chunk
+— ``chunk_len`` vectorized epsilon-greedy steps composed from the DQN's
+``act`` piece inside a ``lax.scan`` — then enqueues the resulting
+``[chunk_len, num_envs]`` transition block for the replay service.  The
+Python thread only dispatches the chunk and moves the result between
+queues; all math happens inside XLA, which releases the GIL, so actors
+overlap with the learner and the prefetch pipeline.
+
+Exploration schedule note: each actor drives ``eps`` with its *local*
+step counter, so with A actors the schedule advances per actor-iteration
+rather than per global frame — the standard per-worker schedule of
+distributed DQN variants.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime import prng
+
+
+class TransitionBlock(NamedTuple):
+    """One rollout chunk handed from an actor to the replay service."""
+
+    transitions: Any            # pytree, leaves [chunk_len, num_envs, ...]
+    frames: int                 # chunk_len * num_envs
+    actor_id: int
+    chunk_id: int
+    completed_returns: np.ndarray  # episodes that finished in this chunk
+
+
+def put_with_stop(q: queue.Queue, item, stop: threading.Event,
+                  timeout: float = 0.05) -> bool:
+    """Blocking put that aborts (returns False) once ``stop`` is set."""
+    while not stop.is_set():
+        try:
+            q.put(item, timeout=timeout)
+            return True
+        except queue.Full:
+            continue
+    return False
+
+
+def make_rollout(dqn, chunk_len: int) -> Callable:
+    """Build the jittable chunk function
+    ``(params, env_state, obs, step0, ep_ret, key) ->
+    (env_state, obs, ep_ret, transitions, finished)``
+    where ``transitions`` leaves lead with ``[chunk_len, num_envs]`` and
+    ``finished`` is ``float32[chunk_len, num_envs]`` holding completed
+    episode returns (NaN where no episode ended)."""
+    act = dqn.act
+
+    def rollout(params, env_state, obs, step0, ep_ret, key):
+        def body(carry, i):
+            env_state, obs, ep_ret = carry
+            env_state, obs, tr = act(
+                params, env_state, obs, step0 + i, jax.random.fold_in(key, i))
+            ret = ep_ret + tr["reward"]
+            done = tr["done"] > 0.5
+            finished = jnp.where(done, ret, jnp.nan)
+            return (env_state, obs, jnp.where(done, 0.0, ret)), (tr, finished)
+
+        (env_state, obs, ep_ret), (transitions, finished) = jax.lax.scan(
+            body, (env_state, obs, ep_ret),
+            jnp.arange(chunk_len, dtype=jnp.int32))
+        return env_state, obs, ep_ret, transitions, finished
+
+    return rollout
+
+
+class Actor(threading.Thread):
+    """One host thread: params snapshot -> rollout chunk -> block queue."""
+
+    def __init__(self, actor_id: int, dqn, rollout: Callable,
+                 params_fn: Callable[[], Any], out_q: queue.Queue,
+                 stop: threading.Event, base_key: jax.Array, chunk_len: int,
+                 budget_fn: Callable[[], bool] | None = None):
+        super().__init__(name=f"replay-actor-{actor_id}", daemon=True)
+        self.actor_id = actor_id
+        self._dqn = dqn
+        self._rollout = rollout
+        self._params_fn = params_fn
+        self._out_q = out_q
+        self._stop_evt = stop
+        self._base_key = base_key
+        self._chunk_len = chunk_len
+        self._budget_fn = budget_fn
+        self.chunks_done = 0
+        self.error: BaseException | None = None
+
+    def run(self) -> None:
+        try:
+            self._loop()
+        except BaseException as e:  # surfaced by the service after join
+            self.error = e
+            self._stop_evt.set()
+
+    def _loop(self) -> None:
+        dqn, chunk_len = self._dqn, self._chunk_len
+        k_reset, k_roll = prng.actor_keys(self._base_key, self.actor_id)
+        env_state = dqn.venv.reset(k_reset)
+        obs = dqn.venv.obs(env_state)
+        ep_ret = jnp.zeros(dqn.cfg.num_envs)
+        step, chunk = 0, 0
+        while not self._stop_evt.is_set():
+            # Replay-ratio throttle: don't burn host cores producing frames
+            # the learner can't consume (matters on small CPU hosts).
+            while (self._budget_fn is not None and not self._budget_fn()
+                   and not self._stop_evt.is_set()):
+                self._stop_evt.wait(0.002)
+            if self._stop_evt.is_set():
+                return
+            env_state, obs, ep_ret, transitions, finished = self._rollout(
+                self._params_fn(), env_state, obs, jnp.int32(step), ep_ret,
+                prng.chunk_key(k_roll, chunk))
+            fin = np.asarray(finished).ravel()
+            block = TransitionBlock(
+                transitions=transitions,
+                frames=chunk_len * dqn.cfg.num_envs,
+                actor_id=self.actor_id, chunk_id=chunk,
+                completed_returns=fin[~np.isnan(fin)])
+            if not put_with_stop(self._out_q, ("block", block), self._stop_evt):
+                return
+            step += chunk_len
+            chunk += 1
+            self.chunks_done = chunk
+
+
+class ActorPool:
+    """A fixed pool of :class:`Actor` threads sharing one block queue."""
+
+    def __init__(self, dqn, rollout: Callable, *, num_actors: int,
+                 params_fn: Callable[[], Any], out_q: queue.Queue,
+                 stop: threading.Event, base_key: jax.Array, chunk_len: int,
+                 budget_fn: Callable[[], bool] | None = None):
+        self.actors = [
+            Actor(i, dqn, rollout, params_fn, out_q, stop, base_key,
+                  chunk_len, budget_fn)
+            for i in range(num_actors)
+        ]
+
+    def start(self) -> None:
+        for a in self.actors:
+            a.start()
+
+    def join(self, timeout: float | None = None) -> None:
+        for a in self.actors:
+            a.join(timeout)
+
+    def raise_errors(self) -> None:
+        for a in self.actors:
+            if a.error is not None:
+                raise RuntimeError(
+                    f"actor {a.actor_id} failed") from a.error

@@ -1,0 +1,122 @@
+"""Double-buffered device prefetch of sampled batch slabs.
+
+The pipeline thread draws batch N+1 while the learner consumes batch N:
+it snapshots the replay service's current buffer state (an immutable
+pytree, so the snapshot is a free Python reference), samples a *slab* of
+S batches in one jitted vmap call — one dispatch instead of S, which is
+what makes host-side sampling keep up with the learner on CPU — and
+pushes the slab into a bounded queue of depth ``prefetch_depth`` (2 =
+classic double buffering).  Any registry sampler works, including the
+mesh-sharded ``amper-fr-sharded``: the pipeline only calls
+``ReplayBuffer.sample`` under jit.
+
+Each slab row carries the sample-time write stamps (for the stale-safe
+deferred priority update) and the learner-step version at draw time (for
+staleness accounting).  Batches are optionally ``device_put`` onto a
+target device here, off the learner's critical path; the learner's jit
+then donates the batch buffers, so a consumed batch's memory is recycled
+into the next step's outputs instead of round-tripping the allocator.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Callable, NamedTuple
+
+import jax
+
+from repro.runtime import prng
+from repro.runtime.actor import put_with_stop
+
+
+class BatchSlab(NamedTuple):
+    """S prefetched batches, stacked on a leading slab axis."""
+
+    seq0: int           # global batch sequence number of row 0
+    idx: jax.Array      # int32[S, batch] sampled replay rows
+    batch: Any          # pytree, leaves [S, batch, ...]
+    weights: jax.Array  # float32[S, batch] importance weights
+    stamp: jax.Array    # int32[S, batch] write stamps at sample time
+    version: int        # learner steps completed when this slab was drawn
+
+
+def make_slab_sampler(replay, batch: int, slab: int) -> Callable:
+    """Build the jittable ``(buffer_state, key) -> (idx, batch, w, stamp)``
+    slab draw: ONE ``S*batch`` draw of the sampler's law reshaped to
+    ``[S, batch]``.
+
+    The PER samplers draw stratified (one uniform per segment of the
+    cumulative mass), so the S*batch rows are split by *interleaving*
+    strata — batch j takes flat rows {j, S+j, 2S+j, ...} — which makes
+    every batch a stratified sample spanning the full priority range (a
+    row-major reshape would hand each batch one contiguous 1/S slice of
+    the mass).  For AMPER (uniform over its CSP) the split is immaterial,
+    and sharing one draw sets the CSP rebuild cadence to one rebuild per
+    S batches — the candidate set the paper rebuilds per sampling event
+    is shared by the slab, which is exactly the replay policy an AM
+    accelerator would run when the host prefetches ahead (see README
+    "Async runtime" on how this interacts with staleness).  Importance
+    weights are max-normalized over the whole slab rather than per batch
+    (the PER normalizer is a heuristic either way).
+    """
+
+    def sample_slab(state, key):
+        idx, tree, w = replay.sample(state, key, batch * slab)
+        # [S*batch, ...] -> [S, batch, ...] with strata interleaved:
+        # slab row j = flat rows {j, S+j, 2S+j, ...}.
+        shape = lambda x: x.reshape(
+            (batch, slab) + x.shape[1:]).swapaxes(0, 1)
+        return (shape(idx), jax.tree.map(shape, tree), shape(w),
+                shape(replay.stamps(state, idx)))
+
+    return sample_slab
+
+
+class PrefetchPipeline(threading.Thread):
+    """Prefetch thread: snapshot -> slab draw -> bounded queue."""
+
+    def __init__(self, sample_fn: Callable, state_fn: Callable, *,
+                 out_q: queue.Queue, stop: threading.Event,
+                 base_key: jax.Array, slab: int, min_size: int,
+                 device=None):
+        super().__init__(name="replay-prefetch", daemon=True)
+        self._sample = sample_fn          # jitted slab draw
+        self._state_fn = state_fn         # () -> (buffer_state, version)
+        self._out_q = out_q
+        self._stop_evt = stop
+        self._base_key = base_key
+        self._slab = slab
+        self._min_size = min_size
+        self._device = device
+        self.slabs_done = 0
+        self.error: BaseException | None = None
+
+    def run(self) -> None:
+        try:
+            self._loop()
+        except BaseException as e:
+            self.error = e
+            self._stop_evt.set()
+
+    def _loop(self) -> None:
+        seq, draw, warm = 0, 0, False
+        while not self._stop_evt.is_set():
+            state, version = self._state_fn()
+            if not warm:  # size only grows; skip the device sync once warm
+                if int(state.size) < self._min_size:
+                    time.sleep(0.002)  # buffer not yet sampleable
+                    continue
+                warm = True
+            idx, batch, weights, stamp = self._sample(
+                state, prng.sample_key(self._base_key, draw))
+            if self._device is not None:
+                batch, weights = jax.device_put(
+                    (batch, weights), self._device)
+            slab = BatchSlab(seq0=seq, idx=idx, batch=batch,
+                             weights=weights, stamp=stamp, version=version)
+            if not put_with_stop(self._out_q, slab, self._stop_evt):
+                return
+            seq += self._slab
+            draw += 1
+            self.slabs_done = draw

@@ -1,0 +1,45 @@
+"""PRNG stream discipline for the async runtime.
+
+Every concurrent consumer of randomness — each actor thread and the
+prefetch pipeline — folds a distinct stream tag (and, for actors, its
+actor id) into the run key before deriving per-chunk / per-draw keys, so
+no two threads ever consume the same key and no key is consumed twice
+within a thread.  This mirrors the PR 1 ``agent_step`` /
+``sample_from_csp`` key-split fixes at the thread level: reuse would
+correlate exploration noise across actors (or exploration with
+sampling), silently biasing the replay distribution.
+
+Layout (``key`` is the key passed to ``ReplayService.run``):
+
+  actor i     fold_in(fold_in(key, ACTOR_STREAM), i) --split--> (reset, roll)
+              chunk c uses fold_in(roll, c); step t in the chunk folds t
+  prefetcher  fold_in(fold_in(key, SAMPLE_STREAM), draw_seq)
+
+``ReplayService`` itself uses the run key only through ``dqn.init`` (and
+the strict-sync path reproduces the scan trainer's ``fold_in(key, 1)``
+step-key derivation exactly), so none of the streams above collide with
+the init stream either.
+"""
+from __future__ import annotations
+
+import jax
+
+ACTOR_STREAM = 0xAC70  # actor-pool stream tag
+SAMPLE_STREAM = 0x5A4B  # prefetch-pipeline stream tag
+
+
+def actor_keys(key: jax.Array, actor_id: int) -> tuple[jax.Array, jax.Array]:
+    """-> (env-reset key, rollout stream key) for one actor thread."""
+    stream = jax.random.fold_in(jax.random.fold_in(key, ACTOR_STREAM), actor_id)
+    k_reset, k_roll = jax.random.split(stream)
+    return k_reset, k_roll
+
+
+def chunk_key(roll_key: jax.Array, chunk_id: int) -> jax.Array:
+    """Per-rollout-chunk key within one actor's stream."""
+    return jax.random.fold_in(roll_key, chunk_id)
+
+
+def sample_key(key: jax.Array, draw_seq: int) -> jax.Array:
+    """Per-draw key for the prefetch pipeline's sampler calls."""
+    return jax.random.fold_in(jax.random.fold_in(key, SAMPLE_STREAM), draw_seq)

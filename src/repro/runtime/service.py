@@ -1,0 +1,326 @@
+"""`ReplayService` — the async actor–learner replay façade.
+
+Wires the pipeline stages into one serving-shaped system:
+
+    actors (threads, jitted rollout chunks)
+        └── transition blocks ──> replay thread (ring writes, canonical
+                                  buffer state, priority feedback applies)
+                                        └── state snapshots ──> prefetch
+                                                thread (slab sampling)
+                                                    └── batch slabs ──>
+    learner (caller thread, fused TD steps)
+        └── deferred priority feedback ──> replay thread (stamped,
+                                           out-of-band, exactly once)
+
+The canonical replay state is owned by ONE thread (the replay thread);
+every other stage sees it only as immutable snapshots, so there are no
+locks around JAX state — just bounded queues.  ``sync=True`` degrades
+the service to a strict synchronous mode: the exact ``agent_step``
+iteration of the scan trainer driven step-by-step, which is the
+apples-to-apples baseline the async speedup is measured against (and the
+mode the equivalence tests pin to the scan trainer's learning curve).
+
+Metrics cover the questions the paper's latency story raises at system
+scale: learner steps/sec, environment frames/sec, queue depths (is the
+sampler or the actor pool the bottleneck?), and priority-feedback
+staleness (how many learner steps old is a priority when it lands).
+"""
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+import time
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.rl.dqn import DQNConfig, make_dqn
+from repro.runtime.actor import ActorPool, make_rollout, put_with_stop
+from repro.runtime.learner import Feedback, Learner, make_slab_learner
+from repro.runtime.pipeline import PrefetchPipeline, make_slab_sampler
+
+
+class RunResult(NamedTuple):
+    params: Any          # final network params (dqn.evaluate accepts them)
+    target_params: Any
+    buffer: Any          # final canonical ReplayState
+    metrics: dict
+
+
+class ReplayService:
+    """Asynchronous actor–learner replay service (or its strict-sync twin).
+
+    Args:
+      cfg: the DQN config (env, sampler, batch, schedules).
+      num_actors: actor threads; each steps ``cfg.num_envs`` envs.
+      sync: strict synchronous mode — requires ``num_actors=1`` and
+        reproduces the scan trainer's iteration exactly.
+      chunk_len: env steps per actor rollout chunk (one dispatch).
+      slab: batches per prefetch draw / fused learner call.
+      prefetch_depth: batch-slab queue depth (2 = double buffering).
+      queue_size: transition-block + feedback queue bound (backpressure).
+      min_size: buffer fill before sampling starts; defaults to the scan
+        trainer's ``learn_start`` worth of frames.
+      max_replay_ratio: optional frames-per-learner-step cap; actors
+        pause when generation runs this far ahead of consumption (frees
+        host cores for the learner on small machines).
+      feedback_log: record the exact per-batch feedback sequence trace in
+        ``metrics["feedback_seqs"]`` (O(learner steps) memory — for tests
+        and debugging; the aggregate staleness stats are always kept).
+      device: optional target device for prefetched batches.
+    """
+
+    def __init__(self, cfg: DQNConfig, *, num_actors: int = 2,
+                 sync: bool = False, chunk_len: int = 32, slab: int = 4,
+                 prefetch_depth: int = 2, queue_size: int = 8,
+                 min_size: int | None = None,
+                 max_replay_ratio: float | None = None,
+                 feedback_log: bool = False, device=None):
+        if sync and num_actors != 1:
+            raise ValueError("sync mode is defined for num_actors=1 "
+                             f"(got {num_actors})")
+        self.cfg = cfg
+        self.sync = sync
+        self.num_actors = num_actors
+        self.chunk_len = chunk_len
+        self.slab = slab
+        self.prefetch_depth = prefetch_depth
+        self.queue_size = queue_size
+        self.device = device
+        self.min_size = (min_size if min_size is not None else
+                         max(cfg.batch,
+                             min(cfg.learn_start * cfg.num_envs,
+                                 cfg.replay_size)))
+        self.max_replay_ratio = max_replay_ratio
+        self.feedback_log = feedback_log
+        self.dqn = make_dqn(cfg)
+        rb = self.dqn.replay
+        # One jitted callable per pipeline stage, built once so repeated
+        # run() calls (warmup, then measurement) reuse the compile cache.
+        self._rollout = jax.jit(make_rollout(self.dqn, chunk_len))
+        self._sample = jax.jit(make_slab_sampler(rb, cfg.batch, slab))
+        # The slab's batch/weight buffers are consumed exactly once ->
+        # donate them (args 5, 6); params/target stay undonated because
+        # actors and the target alias them across calls.  The CPU backend
+        # cannot reuse donated buffers and warns, so only donate off-CPU.
+        donate = () if jax.default_backend() == "cpu" else (5, 6)
+        self._learn = jax.jit(make_slab_learner(self.dqn),
+                              donate_argnums=donate)
+        self._add_block = jax.jit(rb.add_block)
+
+        def apply_feedback(state, idx, td, stamp):
+            # Flatten [S, batch] row-major: masked_update resolves rows
+            # duplicated across batches to their last occurrence, so one
+            # scatter reproduces sequential-apply semantics (stamps can't
+            # change between rows of a slab).
+            flat = lambda x: x.reshape(-1)
+            return rb.update_priorities(
+                state, flat(idx), flat(td), stamp=flat(stamp))
+
+        self._apply_feedback = jax.jit(apply_feedback)
+        self._agent_step = jax.jit(self.dqn.agent_step)
+
+    # ------------------------------------------------------------------ #
+
+    def run(self, key: jax.Array, n_steps: int) -> RunResult:
+        """Train for ``n_steps`` — scan-trainer iterations in sync mode,
+        learner steps (rounded up to a whole slab) in async mode."""
+        if self.sync:
+            return self._run_sync(key, n_steps)
+        return self._run_async(key, n_steps)
+
+    # --- strict synchronous mode -------------------------------------- #
+
+    def _run_sync(self, key: jax.Array, n_steps: int) -> RunResult:
+        cfg = self.cfg
+        state = self.dqn.init(key)
+        # Same step-key derivation as the scan trainer's _train.
+        keys = jax.random.split(jax.random.fold_in(key, 1), n_steps)
+        returns = []
+        t0 = time.perf_counter()
+        t_first_learn = None
+        for t in range(n_steps):
+            if t == cfg.learn_start:
+                jax.block_until_ready(state.params)
+                t_first_learn = time.perf_counter()
+            state, m = self._agent_step(state, keys[t])
+            returns.append(m["return_mean"])
+        jax.block_until_ready(state.params)
+        t_end = time.perf_counter()
+        learner_steps = sum(
+            1 for t in range(n_steps)
+            if t >= cfg.learn_start and t % cfg.train_every == 0)
+        learn_wall = (t_end - t_first_learn if t_first_learn is not None
+                      else float("nan"))
+        curve = np.asarray(jnp.stack(returns)) if returns else np.zeros(0)
+        metrics = {
+            "mode": "sync",
+            "learner_steps": learner_steps,
+            "learner_steps_per_sec": (learner_steps / learn_wall
+                                      if learner_steps else 0.0),
+            "wall_time": t_end - t0,
+            "frames": n_steps * cfg.num_envs,
+            "frames_per_sec": n_steps * cfg.num_envs / (t_end - t0),
+            "return_mean": float(curve[-1]) if len(curve) else 0.0,
+            "return_curve": curve,
+            "staleness": {"count": 0, "mean": 0.0, "max": 0},
+        }
+        return RunResult(params=state.params,
+                         target_params=state.target_params,
+                         buffer=state.buffer, metrics=metrics)
+
+    # --- asynchronous mode -------------------------------------------- #
+
+    def _run_async(self, key: jax.Array, n_steps: int) -> RunResult:
+        cfg = self.cfg
+        state0 = self.dqn.init(key)
+        self._bstate = state0.buffer          # canonical replay state
+        params_box = [state0.params]          # actors read, learner swaps
+        work_q: queue.Queue = queue.Queue(self.queue_size)
+        batch_q: queue.Queue = queue.Queue(self.prefetch_depth)
+        stop = threading.Event()
+        # Running aggregates, bounded regardless of run length; the exact
+        # per-batch sequence trace is opt-in via feedback_log.
+        rec = {"frames": 0, "blocks": 0,
+               "feedback_seqs": [] if self.feedback_log else None,
+               "stale_n": 0, "stale_sum": 0, "stale_max": 0,
+               "returns": collections.deque(maxlen=256),
+               "depth_n": 0, "work_sum": 0, "batch_sum": 0, "error": None}
+
+        learner = Learner(
+            self._learn, in_q=batch_q,
+            feedback_put=lambda fb: put_with_stop(
+                work_q, ("feedback", fb), stop),
+            publish=lambda p: params_box.__setitem__(0, p),
+            target_sync=cfg.target_sync, stop=stop)
+        replay_thread = threading.Thread(
+            target=self._replay_loop, name="replay-core",
+            args=(work_q, batch_q, stop, learner, rec), daemon=True)
+        budget_fn = None
+        if self.max_replay_ratio is not None:
+            ratio, head = self.max_replay_ratio, self.min_size
+
+            def budget_fn():
+                return (rec["frames"]
+                        < head + ratio * max(learner.steps_done, 1))
+
+        pool = ActorPool(
+            self.dqn, self._rollout, num_actors=self.num_actors,
+            params_fn=lambda: params_box[0], out_q=work_q, stop=stop,
+            base_key=key, chunk_len=self.chunk_len, budget_fn=budget_fn)
+        prefetch = PrefetchPipeline(
+            self._sample,
+            state_fn=lambda: (self._bstate, learner.steps_done),
+            out_q=batch_q, stop=stop, base_key=key, slab=self.slab,
+            min_size=self.min_size, device=self.device)
+
+        def shutdown():
+            stop.set()
+            pool.join(timeout=10.0)
+            prefetch.join(timeout=10.0)
+            replay_thread.join(timeout=10.0)
+
+        def raise_worker_errors():
+            if rec["error"] is not None:
+                raise RuntimeError("replay thread failed") from rec["error"]
+            if prefetch.error is not None:
+                raise RuntimeError(
+                    "prefetch pipeline failed") from prefetch.error
+            pool.raise_errors()
+
+        t0 = time.perf_counter()
+        replay_thread.start()
+        pool.start()
+        prefetch.start()
+        try:
+            params, target_params = learner.run(
+                state0.params, state0.target_params,
+                state0.opt_m, state0.opt_v, n_steps)
+            jax.block_until_ready(params)
+            t_end = time.perf_counter()
+        except BaseException:
+            # Join first, then surface the root cause: a learner failure
+            # is often secondary to a worker-thread fault, and raising
+            # from it here chains both tracebacks.
+            shutdown()
+            raise_worker_errors()
+            raise
+        shutdown()
+        raise_worker_errors()
+
+        learn_wall = (t_end - learner.first_step_time
+                      if learner.first_step_time else float("nan"))
+        wall = t_end - t0
+        returns = np.asarray(rec["returns"])
+        metrics = {
+            "mode": "async",
+            "learner_steps": learner.steps_done,
+            "learner_steps_per_sec": (learner.steps_done / learn_wall
+                                      if learner.steps_done else 0.0),
+            "wall_time": wall,
+            "frames": rec["frames"],
+            "frames_per_sec": rec["frames"] / wall,
+            "blocks": rec["blocks"],
+            "return_mean": (float(returns[-64:].mean())
+                            if returns.size else 0.0),
+            "recent_returns": returns[-64:],
+            "feedback_seqs": rec["feedback_seqs"],
+            "staleness": {
+                "count": rec["stale_n"],
+                "mean": (rec["stale_sum"] / rec["stale_n"]
+                         if rec["stale_n"] else 0.0),
+                "max": rec["stale_max"],
+            },
+            "queue_depth": {
+                "work_mean": (rec["work_sum"] / rec["depth_n"]
+                              if rec["depth_n"] else 0.0),
+                "batch_mean": (rec["batch_sum"] / rec["depth_n"]
+                               if rec["depth_n"] else 0.0),
+            },
+            "losses": [float(l) for l in learner.losses],
+        }
+        return RunResult(params=params, target_params=target_params,
+                         buffer=self._bstate, metrics=metrics)
+
+    def _replay_loop(self, work_q: queue.Queue, batch_q: queue.Queue,
+                     stop: threading.Event, learner: Learner,
+                     rec: dict) -> None:
+        """The one owner of the canonical replay state: applies transition
+        blocks and deferred priority feedback in arrival order, publishes
+        immutable snapshots for the prefetcher."""
+        try:
+            bstate = self._bstate
+            while True:
+                try:
+                    tag, item = work_q.get(timeout=0.05)
+                except queue.Empty:
+                    if stop.is_set() and learner.finished and work_q.empty():
+                        return
+                    continue
+                if tag == "block":
+                    bstate = self._add_block(bstate, item.transitions)
+                    rec["frames"] += item.frames
+                    rec["blocks"] += 1
+                    rec["returns"].extend(item.completed_returns.tolist())
+                else:  # deferred priority feedback (one slab, S batches)
+                    fb: Feedback = item
+                    bstate = self._apply_feedback(
+                        bstate, fb.idx, fb.td, fb.stamp)
+                    s = int(fb.idx.shape[0])
+                    if rec["feedback_seqs"] is not None:
+                        rec["feedback_seqs"].extend(
+                            range(fb.seq0, fb.seq0 + s))
+                    stale = learner.steps_done - fb.version
+                    rec["stale_n"] += s
+                    rec["stale_sum"] += stale * s
+                    rec["stale_max"] = max(rec["stale_max"], stale)
+                self._bstate = bstate
+                rec["depth_n"] += 1
+                rec["work_sum"] += work_q.qsize()
+                rec["batch_sum"] += batch_q.qsize()
+        except BaseException as e:
+            rec["error"] = e
+            stop.set()

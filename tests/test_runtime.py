@@ -1,0 +1,196 @@
+"""Async actor–learner runtime: PRNG stream discipline, strict-sync
+equivalence with the scan trainer, deferred-feedback exactness and
+staleness, block enqueue, stamped out-of-band priority updates, and the
+environment registry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.replay_buffer import ReplayBuffer
+from repro.core.samplers import make_sampler, masked_update
+from repro.rl import envs as envs_mod
+from repro.rl.dqn import DQNConfig, make_dqn
+from repro.runtime import ReplayService, prng
+
+
+# --- environment registry ----------------------------------------------------
+
+def test_env_registry_builds_by_name():
+    assert {"cartpole", "acrobot"} <= set(envs_mod.available_envs())
+    env = envs_mod.make_env("cartpole")
+    assert env.obs_dim == 4 and env.n_actions == 2
+    assert envs_mod.make_env("acrobot").obs_dim == 6
+
+
+def test_env_registry_unknown_raises():
+    with pytest.raises(ValueError, match="unknown env"):
+        envs_mod.make_env("pong")
+
+
+def test_env_registry_backcompat_alias():
+    assert envs_mod.ENVS["cartpole"] is envs_mod.CartPole
+
+
+# --- PRNG stream discipline --------------------------------------------------
+
+def test_no_key_reuse_across_actors_and_prefetch():
+    """Regression: every key any runtime thread consumes is distinct —
+    across actors, across chunks within an actor, across prefetch draws,
+    and across the actor/prefetch stream boundary."""
+    key = jax.random.key(0)
+    seen = set()
+
+    def fingerprint(k):
+        return tuple(np.asarray(jax.random.key_data(k)).ravel().tolist())
+
+    for actor_id in range(4):
+        k_reset, k_roll = prng.actor_keys(key, actor_id)
+        for k in (k_reset, *(prng.chunk_key(k_roll, c) for c in range(3))):
+            fp = fingerprint(k)
+            assert fp not in seen, (actor_id, fp)
+            seen.add(fp)
+    for draw in range(6):
+        fp = fingerprint(prng.sample_key(key, draw))
+        assert fp not in seen, ("prefetch", draw)
+        seen.add(fp)
+
+
+# --- block enqueue + stamped out-of-band priority updates --------------------
+
+def _block(t, b, obs_dim=3):
+    n = t * b
+    return {
+        "obs": jnp.arange(n * obs_dim, dtype=jnp.float32).reshape(t, b, obs_dim),
+        "reward": jnp.arange(n, dtype=jnp.float32).reshape(t, b),
+    }
+
+
+def test_add_block_matches_sequential_add_batch():
+    rb = ReplayBuffer(32, make_sampler("per-cumsum", 32))
+    example = {"obs": jnp.zeros(3), "reward": jnp.float32(0)}
+    block = _block(t=3, b=4)
+    s_blk = rb.add_block(rb.init(example), block)
+    s_seq = rb.init(example)
+    for t in range(3):
+        s_seq = rb.add_batch(s_seq, jax.tree.map(lambda x: x[t], block))
+    for a, b_ in zip(jax.tree.leaves(s_blk), jax.tree.leaves(s_seq)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_))
+
+
+def test_write_stamps_track_global_add_counter():
+    rb = ReplayBuffer(8, make_sampler("uniform", 8))
+    state = rb.init({"x": jnp.float32(0)})
+    assert int(state.total_adds) == 0
+    assert (np.asarray(state.write_stamp) == -1).all()
+    state = rb.add_batch(state, {"x": jnp.zeros(6)})
+    state = rb.add_batch(state, {"x": jnp.zeros(4)})   # wraps: 6,7,0,1
+    np.testing.assert_array_equal(
+        np.asarray(state.write_stamp), [8, 9, 2, 3, 4, 5, 6, 7])
+    assert int(state.total_adds) == 10
+
+
+def test_stamped_update_drops_recycled_slots():
+    """A deferred priority update whose slot was overwritten since the
+    sample must not clobber the newcomer's (max-priority) entry."""
+    rb = ReplayBuffer(8, make_sampler("per-cumsum", 8))
+    state = rb.init({"x": jnp.float32(0)})
+    state = rb.add_batch(state, {"x": jnp.zeros(6)})
+    idx = jnp.array([0, 5])
+    stamp = rb.stamps(state, idx)                       # sample-time stamps
+    np.testing.assert_array_equal(np.asarray(stamp), [0, 5])
+    state = rb.add_batch(state, {"x": jnp.zeros(4)})    # recycles slot 0
+    state = rb.update_priorities(
+        state, idx, jnp.array([5.0, 9.0]), stamp=stamp)
+    prios = np.asarray(rb.sampler.priorities(state.sampler_state))
+    alpha_p = lambda td: (abs(td) + rb.eps) ** rb.alpha
+    # slot 5 still holds its sampled transition -> updated
+    np.testing.assert_allclose(prios[5], alpha_p(9.0), rtol=1e-5)
+    # slot 0 was recycled -> keeps the newcomer's max-priority write
+    np.testing.assert_allclose(prios[0], 1.0, rtol=1e-5)
+    # max_priority tracks only the valid rows
+    np.testing.assert_allclose(
+        float(state.max_priority), max(1.0, alpha_p(9.0)), rtol=1e-5)
+
+
+def test_masked_update_is_noop_where_invalid():
+    s = make_sampler("per-sumtree", 16)
+    st = s.update(s.init(), jnp.arange(4), jnp.array([1.0, 2.0, 3.0, 4.0]))
+    st2 = masked_update(s, st, jnp.array([1, 2]), jnp.array([9.0, 9.0]),
+                        jnp.array([True, False]))
+    prios = np.asarray(s.priorities(st2))
+    np.testing.assert_allclose(prios[:4], [1.0, 9.0, 3.0, 4.0], rtol=1e-6)
+
+
+@pytest.mark.parametrize("kind", ["per-cumsum", "per-sumtree", "uniform"])
+def test_masked_update_duplicates_last_occurrence_wins(kind):
+    """Priority draws are with replacement, so deferred feedback can hit
+    the same row several times in one apply; sequential last-write-wins
+    semantics must hold regardless of the backend's scatter winner."""
+    s = make_sampler(kind, 8)
+    st = s.update(s.init(), jnp.arange(8), jnp.full(8, 1.0))
+    idx = jnp.array([3, 5, 3, 3, 5])
+    pri = jnp.array([10.0, 20.0, 30.0, 40.0, 50.0])
+    valid = jnp.array([True, True, True, True, True])
+    prios = np.asarray(s.priorities(masked_update(s, st, idx, pri, valid)))
+    np.testing.assert_allclose(prios[3], 40.0, rtol=1e-6)   # last write to 3
+    np.testing.assert_allclose(prios[5], 50.0, rtol=1e-6)   # last write to 5
+    # a trailing invalid duplicate must not clobber a valid earlier write
+    prios2 = np.asarray(s.priorities(masked_update(
+        s, st, jnp.array([3, 3]), jnp.array([10.0, 99.0]),
+        jnp.array([True, False]))))
+    np.testing.assert_allclose(prios2[3], 10.0, rtol=1e-6)
+
+
+# --- strict-sync equivalence -------------------------------------------------
+
+def test_sync_requires_single_actor():
+    with pytest.raises(ValueError, match="sync mode"):
+        ReplayService(DQNConfig(), sync=True, num_actors=2)
+
+
+def test_sync_service_matches_scan_trainer():
+    """`ReplayService(sync=True, num_actors=1)` reproduces the lax.scan
+    trainer's CartPole learning curve (and final params) within float
+    tolerance — the strict synchronous mode is the scan trainer."""
+    cfg = DQNConfig(num_envs=1, replay_size=512, batch=32, learn_start=100,
+                    eps_decay_steps=500, target_sync=50)
+    key = jax.random.key(0)
+    n = 300
+    dqn = make_dqn(cfg)
+    state, metrics = dqn.train(key, n)
+    res = ReplayService(cfg, sync=True, num_actors=1).run(key, n)
+    np.testing.assert_allclose(
+        np.asarray(metrics["return_mean"]), res.metrics["return_curve"],
+        rtol=1e-4, atol=1e-4)
+    for a, b in zip(jax.tree.leaves(state.params),
+                    jax.tree.leaves(res.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+    assert res.metrics["learner_steps"] == n - cfg.learn_start
+
+
+# --- async mode: deferred feedback contract ----------------------------------
+
+@pytest.mark.parametrize("sampler", ["per-sumtree", "amper-fr"])
+def test_async_feedback_exactly_once_in_order(sampler):
+    """Every learner batch's deferred priority update is applied exactly
+    once, in learner-step order, with non-negative measured staleness."""
+    cfg = DQNConfig(sampler=sampler, num_envs=2, replay_size=256, batch=16,
+                    learn_start=8, eps_decay_steps=200, target_sync=50,
+                    v_max=8.0)
+    svc = ReplayService(cfg, num_actors=2, chunk_len=4, slab=2,
+                        queue_size=4, max_replay_ratio=64,
+                        feedback_log=True)
+    res = svc.run(jax.random.key(1), 20)
+    m = res.metrics
+    assert m["learner_steps"] == 20
+    assert m["feedback_seqs"] == list(range(20)), m["feedback_seqs"]
+    assert m["staleness"]["count"] == 20
+    assert 0 <= m["staleness"]["mean"] <= m["staleness"]["max"]
+    assert m["frames"] > 0 and int(res.buffer.size) > 0
+    # evaluate accepts the bare params the runtime returns
+    score = float(svc.dqn.evaluate(res.params, jax.random.key(2), 2))
+    assert np.isfinite(score)
+    for leaf in jax.tree.leaves(res.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
