@@ -1,0 +1,130 @@
+"""Durability cost: replay checkpoint save/restore latency and the
+pause->drain->snapshot->resume overhead of the async service.
+
+Rows answer the operational questions of the fault-tolerance subsystem:
+
+* how long does one atomic+fsync'd snapshot of a ReplayState take, and
+  how does it scale with capacity (save = host gather + npz + fsync;
+  restore = npz load + device_put)?
+* what does periodic checkpointing cost the sync trainer (relative
+  overhead at a given interval)?
+* what does one full async quiesce cycle cost (pause the actor pool and
+  prefetcher, drain blocks + deferred feedback, write, resume)?
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.core.replay_buffer import ReplayBuffer
+from repro.core.samplers import make_sampler
+from repro.rl.dqn import DQNConfig
+from repro.runtime import ReplayService
+from repro.train import replay_checkpoint as rck
+from repro.train.checkpoint import CheckpointManager
+
+
+def _time_host(fn, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-clock microseconds for a host-side (non-jax) call."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def _populated_state(rb, cap):
+    st = rb.init({"obs": jnp.zeros(8), "action": jnp.int32(0),
+                  "reward": jnp.float32(0)})
+    k = jax.random.key(0)
+    st = rb.add_batch(st, {
+        "obs": jax.random.normal(k, (cap, 8)),
+        "action": jnp.zeros(cap, jnp.int32),
+        "reward": jnp.arange(cap, dtype=jnp.float32)})
+    return jax.block_until_ready(st)
+
+
+def _ckpt_rows(sizes):
+    rows = []
+    for cap in sizes:
+        rb = ReplayBuffer(cap, make_sampler("per-cumsum", cap))
+        st = _populated_state(rb, cap)
+        nbytes = sum(x.nbytes for x in jax.tree.leaves(st))
+        with tempfile.TemporaryDirectory() as d:
+            t_save = _time_host(lambda: rck.save_replay(d, 1, st))
+            t_restore = _time_host(
+                lambda: jax.block_until_ready(
+                    rck.restore_replay(d, 1, rb, {
+                        "obs": jnp.zeros(8), "action": jnp.int32(0),
+                        "reward": jnp.float32(0)})))
+        for op, us in (("save", t_save), ("restore", t_restore)):
+            name = f"replay_ckpt_{op}_n{cap}"
+            derived = f"{nbytes / 1e6:.1f}MB {nbytes / max(us, 1):.0f}MB/s"
+            print(csv_row(name, us, derived))
+            rows.append({"name": name, "us_per_call": us,
+                         "bytes": nbytes, "mb_per_s": nbytes / max(us, 1)})
+    return rows
+
+
+def _service_rows(steps: int):
+    cfg = DQNConfig(sampler="amper-fr", num_envs=2, replay_size=512,
+                    batch=16, learn_start=8, eps_decay_steps=200,
+                    target_sync=50, v_max=8.0)
+    rows = []
+    # sync: relative checkpoint overhead at interval steps//4
+    svc = ReplayService(cfg, sync=True, num_actors=1)
+    key = jax.random.key(0)
+    svc.run(key, steps)  # warmup/compile
+    t0 = time.perf_counter()
+    svc.run(key, steps)
+    base = time.perf_counter() - t0
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, save_interval=max(steps // 4, 1))
+        t0 = time.perf_counter()
+        svc.run(key, steps, manager=mgr)
+        ckpt = time.perf_counter() - t0
+    n_saves = 4
+    over = (ckpt - base) / n_saves * 1e6
+    name = "sync_ckpt_cycle"
+    print(csv_row(name, max(over, 0.0),
+                  f"overhead {100 * (ckpt - base) / base:.1f}% @ {n_saves} saves"))
+    rows.append({"name": name, "us_per_call": over,
+                 "overhead_frac": (ckpt - base) / base})
+
+    # async: full pause->drain->snapshot->resume cycle cost
+    asvc = ReplayService(cfg, num_actors=2, chunk_len=4, slab=2,
+                         queue_size=4, max_replay_ratio=64)
+    asvc.run(key, 2 * asvc.slab)  # warmup/compile
+    t0 = time.perf_counter()
+    asvc.run(key, steps)
+    base = time.perf_counter() - t0
+    with tempfile.TemporaryDirectory() as d:
+        interval = max(steps // 4, asvc.slab)
+        mgr = CheckpointManager(d, save_interval=interval)
+        t0 = time.perf_counter()
+        asvc.run(key, steps, manager=mgr)
+        ckpt = time.perf_counter() - t0
+        n_saves = max(steps // interval, 1)
+    over = (ckpt - base) / n_saves * 1e6
+    name = "async_snapshot_cycle"
+    print(csv_row(name, max(over, 0.0),
+                  f"pause+drain+save+resume, {n_saves} cycles"))
+    rows.append({"name": name, "us_per_call": over, "cycles": n_saves})
+    return rows
+
+
+def run(sizes=(10_000, 100_000), steps: int = 120):
+    return _ckpt_rows(sizes) + _service_rows(steps)
+
+
+if __name__ == "__main__":
+    run()

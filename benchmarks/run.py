@@ -26,7 +26,7 @@ def main() -> None:
                     help="smaller sizes / fewer seeds")
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig7,fig9,table1,samplers,venv,"
-                         "sharded,runtime")
+                         "sharded,runtime,replay")
     ap.add_argument("--out", default=".",
                     help="directory for the BENCH_*.json artifacts")
     args = ap.parse_args()
@@ -65,9 +65,10 @@ def main() -> None:
             written.append(json_path)
         return None  # the child already wrote its own json
 
-    from benchmarks import (bench_runtime, bench_samplers, bench_vector_env,
-                            fig4_latency, fig7_sampling_error,
-                            fig9_hw_latency, table1_learning)
+    from benchmarks import (bench_replay, bench_runtime, bench_samplers,
+                            bench_vector_env, fig4_latency,
+                            fig7_sampling_error, fig9_hw_latency,
+                            table1_learning)
 
     section("fig4", lambda: fig4_latency.run(
         sizes=(1000, 10_000) if args.quick else (1000, 10_000, 100_000)))
@@ -89,6 +90,9 @@ def main() -> None:
     section("runtime", lambda: bench_runtime.run(
         steps=200 if args.quick else 400,
         trials=2 if args.quick else 3))
+    section("replay", lambda: bench_replay.run(
+        sizes=(10_000,) if args.quick else (10_000, 100_000),
+        steps=60 if args.quick else 120))
     section("sharded", sharded_subprocess)
 
     if written:

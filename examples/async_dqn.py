@@ -7,8 +7,16 @@ write-stamp staleness guards.  `--sync` degrades to the strict
 synchronous mode (the scan trainer's iteration, step by step) for an
 apples-to-apples learner-steps/sec comparison.
 
+With ``--ckpt-dir`` the service checkpoints the whole replay stack
+(params, optimizer, buffer + sampler state, per-actor env states and
+PRNG stream positions) via the pause->drain->snapshot->resume protocol,
+flushes a final snapshot on SIGTERM (or a ``PREEMPT`` sentinel file in
+the directory), and AUTO-RESUMES from the latest checkpoint on relaunch
+— kill this script mid-run and rerun the same command to continue.
+
 Run:  PYTHONPATH=src python examples/async_dqn.py --steps 2000
       PYTHONPATH=src python examples/async_dqn.py --sampler per-sumtree --sync
+      PYTHONPATH=src python examples/async_dqn.py --ckpt-dir /tmp/run1
 """
 import argparse
 
@@ -17,6 +25,7 @@ import jax
 from repro.rl.dqn import DQNConfig
 from repro.rl.envs import available_envs
 from repro.runtime import ReplayService
+from repro.train.checkpoint import CheckpointManager
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--env", default="cartpole", choices=available_envs())
@@ -35,6 +44,12 @@ ap.add_argument("--replay", type=int, default=4000)
 ap.add_argument("--sync", action="store_true",
                 help="strict synchronous mode (baseline)")
 ap.add_argument("--seed", type=int, default=0)
+ap.add_argument("--ckpt-dir", default=None,
+                help="checkpoint directory (enables snapshot/auto-resume)")
+ap.add_argument("--ckpt-every", type=int, default=500,
+                help="learner steps between snapshots")
+ap.add_argument("--beta-end", type=float, default=None,
+                help="anneal the PER IS exponent to this value (e.g. 1.0)")
 args = ap.parse_args()
 
 REPLAY_RATIO = 4  # frames per learner step, in units of num_envs
@@ -43,16 +58,27 @@ REPLAY_RATIO = 4  # frames per learner step, in units of num_envs
 # iterations per learner step, so scale the decay horizon to keep the
 # exploration schedule comparable with the --sync baseline.
 decay = max(args.steps // 2, 1) * (1 if args.sync else REPLAY_RATIO)
+# β anneals in LEARNER steps (the unit beta_at is evaluated in, sync or
+# async), so its horizon is --steps — NOT the frame-scaled eps decay.
 cfg = DQNConfig(env=args.env, sampler=args.sampler, num_envs=args.num_envs,
                 replay_size=args.replay, learn_start=50,
-                eps_decay_steps=decay, target_sync=100, v_max=8.0)
+                eps_decay_steps=decay, target_sync=100, v_max=8.0,
+                beta_end=args.beta_end,
+                beta_anneal_steps=args.steps if args.beta_end else None)
 svc = ReplayService(cfg, sync=args.sync,
                     num_actors=1 if args.sync else args.actors,
                     chunk_len=args.chunk, slab=args.slab,
                     max_replay_ratio=REPLAY_RATIO * args.num_envs)
 key = jax.random.key(args.seed)
-svc.run(key, 60 if args.sync else 2 * args.slab)   # compile warmup
-res = svc.run(key, args.steps)
+manager = (CheckpointManager(args.ckpt_dir, keep=3,
+                             save_interval=args.ckpt_every)
+           if args.ckpt_dir else None)
+if manager is None:
+    svc.run(key, 60 if args.sync else 2 * args.slab)   # compile warmup
+res = svc.run(key, args.steps, manager=manager)
+if manager is not None and res.metrics.get("preempted_at") is not None:
+    print(f"preempted: snapshot flushed at step "
+          f"{res.metrics['preempted_at']}; rerun to resume")
 m = res.metrics
 print(f"mode={m['mode']} sampler={args.sampler} env={args.env}")
 print(f"learner steps/s = {m['learner_steps_per_sec']:8.0f}   "

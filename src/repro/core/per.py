@@ -147,9 +147,26 @@ class CumsumPER:
         return jnp.clip(idx, 0, self.capacity - 1).astype(jnp.int32)
 
 
+def beta_schedule(beta0: float, beta_end: float, step: jax.Array,
+                  horizon: int) -> jax.Array:
+    """Linearly annealed IS exponent β(t), per Schaul et al. Sec. 3.4.
+
+    PER's importance-sampling correction is only unbiased at β = 1; the
+    paper anneals β from its initial value to 1 over training so the
+    correction is full-strength by convergence.  ``step`` may be traced
+    (the schedule runs inside jitted train steps); past ``horizon`` the
+    value clamps at ``beta_end``.
+    """
+    frac = jnp.clip(step / jnp.maximum(horizon, 1), 0.0, 1.0)
+    return beta0 + (beta_end - beta0) * frac
+
+
 def importance_weights(priorities: jax.Array, idx: jax.Array, size: jax.Array,
-                       beta: float) -> jax.Array:
-    """PER importance-sampling weights, max-normalised (Schaul et al. Eq. 2)."""
+                       beta: float | jax.Array) -> jax.Array:
+    """PER importance-sampling weights, max-normalised (Schaul et al. Eq. 2).
+
+    ``beta`` may be a traced scalar (annealed schedules thread it through
+    jitted sampling)."""
     total = jnp.maximum(jnp.sum(priorities), 1e-12)
     p_sel = jnp.maximum(priorities[idx], 1e-12) / total
     w = (size.astype(jnp.float32) * p_sel) ** (-beta)

@@ -143,13 +143,19 @@ class ReplayBuffer:
             lambda x: x.reshape((t * b,) + x.shape[2:]), block)
         return self.add_batch(state, flat)
 
-    def sample(self, state: ReplayState, key: jax.Array, batch: int):
-        """Returns (indices, transitions, is_weights)."""
+    def sample(self, state: ReplayState, key: jax.Array, batch: int,
+               beta: float | jax.Array | None = None):
+        """Returns (indices, transitions, is_weights).
+
+        ``beta`` overrides the constructor's constant IS exponent for
+        this draw — the hook annealed schedules (β→1 over training, per
+        Schaul et al.) thread through; may be a traced scalar.
+        """
         idx = self.sampler.sample(state.sampler_state, key, batch)
         batch_tree = jax.tree.map(lambda buf: buf[idx], state.storage)
         prios = self.sampler.priorities(state.sampler_state)
         w = importance_weights(prios, idx, jnp.maximum(state.size, 1),
-                               self.beta)
+                               self.beta if beta is None else beta)
         return idx, batch_tree, w
 
     def stamps(self, state: ReplayState, idx: jax.Array) -> jax.Array:

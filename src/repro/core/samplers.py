@@ -101,6 +101,16 @@ def masked_update(sampler: Sampler, state: Any, idx: jax.Array,
     return sampler.update(state, idx, value)
 
 
+def abstract_state(sampler: Sampler) -> Any:
+    """Abstract (ShapeDtypeStruct) pytree of ``sampler.init()``.
+
+    Sampler states are pure pytrees, so this is the checkpoint-restore
+    target for ANY registry kind — the serialization layer
+    (:mod:`repro.train.replay_checkpoint`) needs no per-sampler code.
+    """
+    return jax.eval_shape(sampler.init)
+
+
 _REGISTRY: dict[str, Callable[..., Sampler]] = {}
 
 

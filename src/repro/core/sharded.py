@@ -225,6 +225,22 @@ def sharded_sample_per(mesh: Mesh, batch: int,
                      check_rep=False)
 
 
+def repartition(sampler, state):
+    """Move a sampler state onto ``sampler``'s mesh placement.
+
+    The elastic-restore primitive: a state that lives dense on host, on
+    one device, or partitioned over a DIFFERENT shard count is device_put
+    leaf-by-leaf with the target sampler's capacity-dim ``NamedSharding``
+    — values (and therefore CSP membership / sampling law) are unchanged,
+    only the partitioning moves.  Works for any sampler exposing
+    ``.sharding``; for unsharded samplers it is the identity.
+    """
+    sh = getattr(sampler, "sharding", None)
+    if sh is None:
+        return state
+    return jax.tree.map(lambda x: jax.device_put(jnp.asarray(x), sh), state)
+
+
 # --- mesh-native Sampler implementations -------------------------------------
 
 

@@ -29,9 +29,11 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.per import beta_schedule
 from repro.core.replay_buffer import ReplayBuffer
 from repro.core.samplers import make_sampler
 from repro.rl import envs as envs_mod
+from repro.train import checkpoint as ckpt_mod
 
 RETURN_RING = 64  # completed-episode returns kept for the train metric
 
@@ -54,6 +56,12 @@ class DQNConfig:
     train_every: int = 1
     alpha: float = 0.6
     beta: float = 0.4
+    # IS-exponent annealing (Schaul et al.: β→1 over training).  beta_end
+    # None keeps the constant-β behaviour; beta_anneal_steps None uses
+    # eps_decay_steps as the horizon.  Steps are scan iterations for the
+    # sync trainers and learner steps for the async runtime.
+    beta_end: float | None = None
+    beta_anneal_steps: int | None = None
     # AMPER hyper-parameters (paper defaults: m=20, CSP ratio 0.15)
     amper_m: int = 20
     amper_lam_fr: float = 2.0
@@ -106,6 +114,7 @@ class DQN(NamedTuple):
     init: Callable
     agent_step: Callable
     train: Callable          # (key, n_steps) -> (AgentState, metrics)
+    train_ckpt: Callable     # (key, n_steps, manager) -> checkpointed train
     train_many: Callable     # (keys [S], n_steps) -> batched states/metrics
     evaluate: Callable       # (params/AgentState, key, n_episodes) -> return
     evaluate_many: Callable  # (batched states, keys [S], n_episodes) -> [S]
@@ -117,6 +126,7 @@ class DQN(NamedTuple):
     env: Any                 # scalar env instance
     venv: Any                # VectorEnv over cfg.num_envs copies
     replay: Any              # the ReplayBuffer (sampler attached)
+    beta_at: Callable        # (step) -> IS exponent under cfg's schedule
 
 
 def make_dqn(cfg: DQNConfig) -> DQN:
@@ -168,6 +178,15 @@ def make_dqn(cfg: DQNConfig) -> DQN:
         params = jax.tree.map(
             lambda p, mm, vv: p - lr * mm / (jnp.sqrt(vv) + eps), params, m, v)
         return params, m, v
+
+    def beta_at(step):
+        """IS exponent at ``step`` (traced-scalar safe).  Constant unless
+        the config opts into annealing via ``beta_end``."""
+        if cfg.beta_end is None:
+            return cfg.beta
+        horizon = (cfg.beta_anneal_steps if cfg.beta_anneal_steps is not None
+                   else cfg.eps_decay_steps)
+        return beta_schedule(cfg.beta, cfg.beta_end, step, horizon)
 
     def act(params, env_state, obs, step, key):
         """One vectorized epsilon-greedy env step (the actor piece).
@@ -222,7 +241,8 @@ def make_dqn(cfg: DQNConfig) -> DQN:
 
         def do_train(args):
             params, m, v, buffer = args
-            idx, batch, w = rb.sample(buffer, k_sample, cfg.batch)
+            idx, batch, w = rb.sample(buffer, k_sample, cfg.batch,
+                                      beta=beta_at(state.step))
             params, m, v, td, _ = learn(
                 params, state.target_params, m, v, state.step, batch, w)
             buffer = rb.update_priorities(buffer, idx, td)
@@ -258,6 +278,66 @@ def make_dqn(cfg: DQNConfig) -> DQN:
     # Multi-seed sweep: one compiled program, seeds run data-parallel.
     train_many = jax.jit(jax.vmap(_train, in_axes=(0, None)),
                          static_argnames="n_steps")
+
+    scan_segment = jax.jit(
+        lambda state, keys: jax.lax.scan(agent_step, state, keys))
+
+    def train_ckpt(key, n_steps: int, manager: ckpt_mod.CheckpointManager):
+        """The scan trainer with periodic checkpoint + exact resume.
+
+        The per-step key array is derived once for the WHOLE run
+        (``split(fold_in(key, 1), n_steps)``, exactly as ``train``) and
+        the scan runs in ``save_interval`` segments with an atomic
+        checkpoint of the full :class:`AgentState` — params, optimizer
+        moments, replay buffer, sampler state, env state, and episode
+        accounting — between segments.  A killed run resumed from the
+        latest checkpoint reaches the same final state as an
+        uninterrupted ``train_ckpt`` run, bit for bit (pinned by
+        ``tests/test_resume.py``); against the single-scan ``train`` the
+        match is float-tolerance only, because XLA compiles the segmented
+        and fused programs with different reassociation.
+
+        Because the key derivation depends on ``n_steps``, resuming with
+        a different ``n_steps`` would silently change every step key; the
+        manifest records it and a mismatch raises.
+
+        Returns ``(state, metrics, done_steps)`` where ``metrics`` covers
+        only the steps run by THIS invocation and ``done_steps < n_steps``
+        iff the manager was preempted mid-run (a final checkpoint is
+        flushed first).
+        """
+        keys = jax.random.split(jax.random.fold_in(key, 1), n_steps)
+        state = None
+        start = 0
+        latest = manager.latest_step()
+        if latest is not None:
+            saved = ckpt_mod.load_meta(manager.directory, latest)
+            if saved.get("n_steps", n_steps) != n_steps:
+                raise ValueError(
+                    f"resume with n_steps={n_steps} but checkpoint was "
+                    f"written by an n_steps={saved['n_steps']} run; the "
+                    f"step-key derivation depends on n_steps, so this "
+                    f"would not be an exact resume")
+            target = jax.eval_shape(init, jax.random.key(0))
+            state = ckpt_mod.restore(manager.directory, latest, target)
+            start = latest
+        if state is None:  # no checkpoint: only now pay for a fresh init
+            state = init(key)
+        parts = []
+        t = start
+        while t < n_steps:
+            seg = min(n_steps - t, manager.save_interval)
+            state, m = scan_segment(state, keys[t:t + seg])
+            parts.append(m)
+            t += seg
+            if manager.should_save(t) or t == n_steps:
+                manager.save(t, state, meta={"n_steps": n_steps, "step": t})
+            if manager.preempted and t < n_steps:
+                break
+        if not parts:  # resumed a run that had already completed
+            return state, {"return_mean": jnp.zeros((0,))}, t
+        metrics = jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts)
+        return state, metrics, t
 
     def evaluate(state, key, n_episodes: int = 10) -> jax.Array:
         """Greedy-policy average return (the paper's 'test score').
@@ -296,6 +376,7 @@ def make_dqn(cfg: DQNConfig) -> DQN:
         return jax.vmap(lambda s, k: evaluate(s, k, n_episodes))(states, keys)
 
     return DQN(init=init, agent_step=agent_step, train=train,
-               train_many=train_many, evaluate=evaluate,
-               evaluate_many=evaluate_many, act=act, learn=learn,
-               cfg=cfg, env=env, venv=venv, replay=rb)
+               train_ckpt=train_ckpt, train_many=train_many,
+               evaluate=evaluate, evaluate_many=evaluate_many, act=act,
+               learn=learn, cfg=cfg, env=env, venv=venv, replay=rb,
+               beta_at=beta_at)

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -47,6 +48,62 @@ def put_with_stop(q: queue.Queue, item, stop: threading.Event,
         except queue.Full:
             continue
     return False
+
+
+class PauseGate:
+    """Cooperative quiesce point for the pipeline threads.
+
+    The snapshot orchestrator calls :meth:`pause`; each worker thread
+    parks at its next :meth:`wait_if_paused` call (registering itself, so
+    :meth:`wait_parked` can await full quiescence) and stays parked until
+    :meth:`resume`.  Parking happens only at loop boundaries — after a
+    worker's in-flight queue put has completed — so a fully-parked
+    pipeline has every produced item already in a queue, where the replay
+    thread (which never parks) can drain it before the snapshot is taken.
+    """
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._paused = False
+        self._parked = 0
+
+    @property
+    def paused(self) -> bool:
+        return self._paused
+
+    def pause(self) -> None:
+        with self._cond:
+            self._paused = True
+
+    def resume(self) -> None:
+        with self._cond:
+            self._paused = False
+            self._cond.notify_all()
+
+    def wait_if_paused(self, stop: threading.Event) -> None:
+        """Worker side: park here while the gate is paused."""
+        if not self._paused:
+            return
+        with self._cond:
+            self._parked += 1
+            self._cond.notify_all()
+            try:
+                while self._paused and not stop.is_set():
+                    self._cond.wait(timeout=0.05)
+            finally:
+                self._parked -= 1
+                self._cond.notify_all()
+
+    def wait_parked(self, n: int, stop: threading.Event,
+                    timeout: float = 60.0) -> bool:
+        """Orchestrator side: block until ``n`` workers are parked."""
+        deadline = time.monotonic() + timeout
+        with self._cond:
+            while self._parked < n:
+                if stop.is_set() or time.monotonic() > deadline:
+                    return False
+                self._cond.wait(timeout=0.05)
+        return True
 
 
 def make_rollout(dqn, chunk_len: int) -> Callable:
@@ -82,7 +139,9 @@ class Actor(threading.Thread):
     def __init__(self, actor_id: int, dqn, rollout: Callable,
                  params_fn: Callable[[], Any], out_q: queue.Queue,
                  stop: threading.Event, base_key: jax.Array, chunk_len: int,
-                 budget_fn: Callable[[], bool] | None = None):
+                 budget_fn: Callable[[], bool] | None = None,
+                 gate: PauseGate | None = None,
+                 resume_state: dict | None = None):
         super().__init__(name=f"replay-actor-{actor_id}", daemon=True)
         self.actor_id = actor_id
         self._dqn = dqn
@@ -93,8 +152,17 @@ class Actor(threading.Thread):
         self._base_key = base_key
         self._chunk_len = chunk_len
         self._budget_fn = budget_fn
-        self.chunks_done = 0
+        self._gate = gate
+        self._resume_state = resume_state
+        self.chunks_done = (0 if resume_state is None
+                            else int(resume_state["chunk"]))
         self.error: BaseException | None = None
+        # Exact-resume snapshot slot: refreshed after every completed
+        # chunk's enqueue, so whenever this actor is parked (or joined)
+        # it describes the state the actor will continue from.  The PRNG
+        # stream is captured by the two integers: chunk c's rollout key
+        # is fold_in(roll_key, c) and never depends on wall history.
+        self.run_state: dict | None = None
 
     def run(self) -> None:
         try:
@@ -103,19 +171,38 @@ class Actor(threading.Thread):
             self.error = e
             self._stop_evt.set()
 
+    def _publish_run_state(self, env_state, obs, ep_ret, step, chunk):
+        self.run_state = {"env_state": env_state, "obs": obs,
+                          "ep_ret": ep_ret, "step": step, "chunk": chunk}
+
     def _loop(self) -> None:
         dqn, chunk_len = self._dqn, self._chunk_len
         k_reset, k_roll = prng.actor_keys(self._base_key, self.actor_id)
-        env_state = dqn.venv.reset(k_reset)
-        obs = dqn.venv.obs(env_state)
-        ep_ret = jnp.zeros(dqn.cfg.num_envs)
-        step, chunk = 0, 0
+        if self._resume_state is None:
+            env_state = dqn.venv.reset(k_reset)
+            obs = dqn.venv.obs(env_state)
+            ep_ret = jnp.zeros(dqn.cfg.num_envs)
+            step, chunk = 0, 0
+        else:
+            # Exact continuation: env state, episode accounting, and the
+            # PRNG stream position (chunk counter) come from the snapshot;
+            # chunk_key(k_roll, chunk) resumes the same key stream an
+            # uninterrupted run would have consumed next.
+            rs = self._resume_state
+            env_state, obs, ep_ret = rs["env_state"], rs["obs"], rs["ep_ret"]
+            step, chunk = int(rs["step"]), int(rs["chunk"])
+        self._publish_run_state(env_state, obs, ep_ret, step, chunk)
         while not self._stop_evt.is_set():
+            if self._gate is not None:
+                self._gate.wait_if_paused(self._stop_evt)
             # Replay-ratio throttle: don't burn host cores producing frames
             # the learner can't consume (matters on small CPU hosts).
             while (self._budget_fn is not None and not self._budget_fn()
-                   and not self._stop_evt.is_set()):
+                   and not self._stop_evt.is_set()
+                   and not (self._gate is not None and self._gate.paused)):
                 self._stop_evt.wait(0.002)
+            if self._gate is not None and self._gate.paused:
+                continue  # park at the loop-top gate before rolling out
             if self._stop_evt.is_set():
                 return
             env_state, obs, ep_ret, transitions, finished = self._rollout(
@@ -132,6 +219,7 @@ class Actor(threading.Thread):
             step += chunk_len
             chunk += 1
             self.chunks_done = chunk
+            self._publish_run_state(env_state, obs, ep_ret, step, chunk)
 
 
 class ActorPool:
@@ -140,12 +228,23 @@ class ActorPool:
     def __init__(self, dqn, rollout: Callable, *, num_actors: int,
                  params_fn: Callable[[], Any], out_q: queue.Queue,
                  stop: threading.Event, base_key: jax.Array, chunk_len: int,
-                 budget_fn: Callable[[], bool] | None = None):
+                 budget_fn: Callable[[], bool] | None = None,
+                 gate: PauseGate | None = None,
+                 resume_states: list | None = None):
         self.actors = [
             Actor(i, dqn, rollout, params_fn, out_q, stop, base_key,
-                  chunk_len, budget_fn)
+                  chunk_len, budget_fn, gate=gate,
+                  resume_state=(resume_states[i] if resume_states else None))
             for i in range(num_actors)
         ]
+
+    @property
+    def chunks_done(self) -> int:
+        return sum(a.chunks_done for a in self.actors)
+
+    def run_states(self) -> list:
+        """Per-actor exact-resume snapshots (valid while parked/joined)."""
+        return [a.run_state for a in self.actors]
 
     def start(self) -> None:
         for a in self.actors:

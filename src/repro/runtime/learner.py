@@ -80,15 +80,25 @@ class Learner:
     def __init__(self, learn_fn: Callable, *, in_q: queue.Queue,
                  feedback_put: Callable[[Feedback], bool],
                  publish: Callable[[Any], None], target_sync: int,
-                 stop: threading.Event):
+                 stop: threading.Event, start_steps: int = 0,
+                 on_slab: Callable[..., bool] | None = None):
         self._learn = learn_fn            # jitted fused slab step
         self._in_q = in_q
         self._feedback_put = feedback_put
         self._publish = publish
         self._target_sync = max(int(target_sync), 1)
         self._stop = stop
-        self.steps_done = 0               # learner steps (batches) applied
+        # Checkpoint hook: called after every completed slab (feedback
+        # enqueued, params published) with the live (params, target,
+        # opt_m, opt_v); returning True stops the run early — the
+        # preemption exit used by the snapshot orchestrator.
+        self._on_slab = on_slab
+        self.steps_done = start_steps     # learner steps (batches) applied
         self.finished = False             # all feedback for the run emitted
+        # Live optimizer moments, exposed for the final checkpoint after
+        # the run ends (Python reference swaps, no copies).
+        self.opt_m = None
+        self.opt_v = None
         # Last loss per slab, kept as device arrays (no host sync) and
         # bounded so multi-million-step runs don't grow without limit.
         self.losses: collections.deque = collections.deque(maxlen=256)
@@ -98,6 +108,7 @@ class Learner:
             n_steps: int) -> tuple[Any, Any]:
         """Consume slabs until ``n_steps`` learner steps are done (rounded
         up to a whole slab).  Returns (params, target_params)."""
+        self.opt_m, self.opt_v = opt_m, opt_v
         try:
             while self.steps_done < n_steps and not self._stop.is_set():
                 slab = self._get_slab()
@@ -108,6 +119,7 @@ class Learner:
                 params, opt_m, opt_v, td, loss = self._learn(
                     params, target_params, opt_m, opt_v,
                     jnp.int32(self.steps_done), slab.batch, slab.weights)
+                self.opt_m, self.opt_v = opt_m, opt_v
                 s = int(td.shape[0])
                 self._feedback_put(Feedback(
                     seq0=slab.seq0, idx=slab.idx, td=td,
@@ -121,6 +133,9 @@ class Learner:
                         > prev // self._target_sync):
                     target_params = params
                 self._publish(params)
+                if self._on_slab is not None and self._on_slab(
+                        params, target_params, opt_m, opt_v):
+                    break
         finally:
             # The replay thread's exit condition requires finished=True;
             # set it even when the learn step raises, or the replay-core

@@ -25,9 +25,10 @@ import time
 from typing import Any, Callable, NamedTuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.runtime import prng
-from repro.runtime.actor import put_with_stop
+from repro.runtime.actor import PauseGate
 
 
 class BatchSlab(NamedTuple):
@@ -61,8 +62,8 @@ def make_slab_sampler(replay, batch: int, slab: int) -> Callable:
     (the PER normalizer is a heuristic either way).
     """
 
-    def sample_slab(state, key):
-        idx, tree, w = replay.sample(state, key, batch * slab)
+    def sample_slab(state, key, beta):
+        idx, tree, w = replay.sample(state, key, batch * slab, beta=beta)
         # [S*batch, ...] -> [S, batch, ...] with strata interleaved:
         # slab row j = flat rows {j, S+j, 2S+j, ...}.
         shape = lambda x: x.reshape(
@@ -79,7 +80,9 @@ class PrefetchPipeline(threading.Thread):
     def __init__(self, sample_fn: Callable, state_fn: Callable, *,
                  out_q: queue.Queue, stop: threading.Event,
                  base_key: jax.Array, slab: int, min_size: int,
-                 device=None):
+                 device=None, beta_fn: Callable[[int], float] | None = None,
+                 gate: PauseGate | None = None, start_draw: int = 0,
+                 start_seq: int = 0):
         super().__init__(name="replay-prefetch", daemon=True)
         self._sample = sample_fn          # jitted slab draw
         self._state_fn = state_fn         # () -> (buffer_state, version)
@@ -89,6 +92,16 @@ class PrefetchPipeline(threading.Thread):
         self._slab = slab
         self._min_size = min_size
         self._device = device
+        # version -> IS exponent: the annealed-β schedule evaluated at the
+        # learner step this slab was drawn for (constant when disabled).
+        self._beta_fn = beta_fn
+        self._gate = gate
+        # Resume counters: ``draws`` is the PRNG stream position (every
+        # performed draw consumed sample_key(base_key, draw), delivered
+        # or not), ``seq`` the global batch sequence of the next slab.
+        self._start_draw = start_draw
+        self._start_seq = start_seq
+        self.draws = start_draw
         self.slabs_done = 0
         self.error: BaseException | None = None
 
@@ -99,24 +112,46 @@ class PrefetchPipeline(threading.Thread):
             self.error = e
             self._stop_evt.set()
 
+    def _try_put(self, slab) -> bool:
+        """One bounded put attempt; abandon to the gate/stop checks."""
+        try:
+            self._out_q.put(slab, timeout=0.05)
+            return True
+        except queue.Full:
+            return False
+
     def _loop(self) -> None:
-        seq, draw, warm = 0, 0, False
+        seq, draw, warm = self._start_seq, self._start_draw, False
+        pending = None
         while not self._stop_evt.is_set():
-            state, version = self._state_fn()
-            if not warm:  # size only grows; skip the device sync once warm
-                if int(state.size) < self._min_size:
-                    time.sleep(0.002)  # buffer not yet sampleable
-                    continue
-                warm = True
-            idx, batch, weights, stamp = self._sample(
-                state, prng.sample_key(self._base_key, draw))
-            if self._device is not None:
-                batch, weights = jax.device_put(
-                    (batch, weights), self._device)
-            slab = BatchSlab(seq0=seq, idx=idx, batch=batch,
-                             weights=weights, stamp=stamp, version=version)
-            if not put_with_stop(self._out_q, slab, self._stop_evt):
-                return
-            seq += self._slab
-            draw += 1
-            self.slabs_done = draw
+            if self._gate is not None:
+                # Park holding any undelivered slab: the learner stops
+                # consuming during a snapshot, so a blocking put here
+                # would deadlock the quiesce.  The pending slab is
+                # delivered after resume — sequence numbers stay gapless.
+                self._gate.wait_if_paused(self._stop_evt)
+            if pending is None:
+                state, version = self._state_fn()
+                if not warm:  # size only grows; skip the device sync once warm
+                    if int(state.size) < self._min_size:
+                        time.sleep(0.002)  # buffer not yet sampleable
+                        continue
+                    warm = True
+                # None (a leafless pytree, so still one jit trace) lets
+                # replay.sample fall back to its constructor constant.
+                beta = (jnp.float32(self._beta_fn(version))
+                        if self._beta_fn is not None else None)
+                idx, batch, weights, stamp = self._sample(
+                    state, prng.sample_key(self._base_key, draw), beta)
+                draw += 1
+                self.draws = draw
+                if self._device is not None:
+                    batch, weights = jax.device_put(
+                        (batch, weights), self._device)
+                pending = BatchSlab(seq0=seq, idx=idx, batch=batch,
+                                    weights=weights, stamp=stamp,
+                                    version=version)
+            if self._try_put(pending):
+                pending = None
+                seq += self._slab
+                self.slabs_done += 1

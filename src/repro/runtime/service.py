@@ -20,6 +20,21 @@ iteration of the scan trainer driven step-by-step, which is the
 apples-to-apples baseline the async speedup is measured against (and the
 mode the equivalence tests pin to the scan trainer's learning curve).
 
+Durability: pass a :class:`~repro.train.checkpoint.CheckpointManager` to
+:meth:`ReplayService.run` and the service checkpoints the WHOLE replay
+stack — params, optimizer moments, the canonical ``ReplayState``
+(storage, priority tables, write stamps, ``max_priority``, ring
+position), per-actor env states and PRNG stream positions, and the
+prefetcher's draw counter — and auto-resumes from the latest checkpoint.
+In async mode each snapshot runs a pause→drain→snapshot→resume protocol:
+the actor pool and the prefetcher park at a :class:`PauseGate`, the
+replay thread drains every enqueued transition block and every deferred
+priority feedback slab the learner has emitted, and only then is the
+quiescent state written (atomically, fsync'd).  In sync mode a killed
+run resumed from its checkpoint is BIT-IDENTICAL to an uninterrupted
+one (pinned by ``tests/test_resume.py``); async resume is tolerance-
+level by nature (thread interleaving changes which frames land first).
+
 Metrics cover the questions the paper's latency story raises at system
 scale: learner steps/sec, environment frames/sec, queue depths (is the
 sampler or the actor pool the bottleneck?), and priority-feedback
@@ -38,9 +53,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.rl.dqn import DQNConfig, make_dqn
-from repro.runtime.actor import ActorPool, make_rollout, put_with_stop
+from repro.runtime.actor import (ActorPool, PauseGate, make_rollout,
+                                 put_with_stop)
 from repro.runtime.learner import Feedback, Learner, make_slab_learner
 from repro.runtime.pipeline import PrefetchPipeline, make_slab_sampler
+from repro.train import checkpoint as ckpt_mod
+from repro.train import replay_checkpoint as rck
 
 
 class RunResult(NamedTuple):
@@ -125,35 +143,122 @@ class ReplayService:
 
     # ------------------------------------------------------------------ #
 
-    def run(self, key: jax.Array, n_steps: int) -> RunResult:
+    def run(self, key: jax.Array, n_steps: int,
+            manager: ckpt_mod.CheckpointManager | None = None) -> RunResult:
         """Train for ``n_steps`` — scan-trainer iterations in sync mode,
-        learner steps (rounded up to a whole slab) in async mode."""
+        learner steps (rounded up to a whole slab) in async mode.
+
+        With a ``manager`` the run checkpoints periodically (and on
+        preemption) and AUTO-RESUMES from the manager's latest
+        checkpoint; ``n_steps`` is the absolute target, so a resumed run
+        executes only the remainder.  The saved snapshot embeds the run
+        key, so the resumed process does not need to pass the same
+        ``key`` — but sync mode validates ``n_steps`` (the step-key array
+        derivation depends on it).
+        """
+        if manager is not None:
+            manager.install_preemption_hook()  # no-op off the main thread
         if self.sync:
-            return self._run_sync(key, n_steps)
-        return self._run_async(key, n_steps)
+            return self._run_sync(key, n_steps, manager)
+        return self._run_async(key, n_steps, manager)
+
+    # --- checkpoint snapshot targets ----------------------------------- #
+
+    def _key_data_struct(self):
+        kd = jax.random.key_data(jax.random.key(0))
+        return jax.ShapeDtypeStruct(kd.shape, kd.dtype)
+
+    def _sync_target(self):
+        return {"key_data": self._key_data_struct(),
+                "state": jax.eval_shape(self.dqn.init, jax.random.key(0))}
+
+    def _async_target(self):
+        a = jax.eval_shape(self.dqn.init, jax.random.key(0))
+        actor_t = {"env_state": a.env_state, "obs": a.obs,
+                   "ep_ret": jax.ShapeDtypeStruct((self.cfg.num_envs,),
+                                                  jnp.float32)}
+        return {"key_data": self._key_data_struct(),
+                "params": a.params, "target_params": a.target_params,
+                "opt_m": a.opt_m, "opt_v": a.opt_v, "buffer": a.buffer,
+                "actors": [actor_t for _ in range(self.num_actors)]}
+
+    def _restore(self, manager, target, mode: str, **expected):
+        """(step, snapshot, meta) from the latest checkpoint, or Nones.
+
+        The meta is validated BEFORE the arrays load, so a topology
+        mismatch (actor count, mode, n_steps) reads as what it is rather
+        than a leaf-count error.  The buffer subtree is device_put with
+        the CURRENT sampler's mesh placement (``replay_shardings``), so a
+        snapshot saved on 8 shards resumes on 2 — or on one device —
+        transparently.
+        """
+        step = manager.latest_step()
+        if step is None:
+            return None, None, None
+        meta = ckpt_mod.load_meta(manager.directory, step)
+        self._check_meta(meta, mode, **expected)
+        snap = ckpt_mod.restore(
+            manager.directory, step, target,
+            rck.replay_shardings(self.dqn.replay, target))
+        return step, snap, meta
+
+    @staticmethod
+    def _check_meta(meta: dict, mode: str, **expected) -> None:
+        if meta.get("mode") != mode:
+            raise ValueError(f"checkpoint was written by a "
+                             f"{meta.get('mode')!r}-mode run, cannot "
+                             f"resume in {mode!r} mode")
+        for k, want in expected.items():
+            if meta.get(k, want) != want:
+                raise ValueError(f"checkpoint {k}={meta[k]} does not match "
+                                 f"this service's {k}={want}")
 
     # --- strict synchronous mode -------------------------------------- #
 
-    def _run_sync(self, key: jax.Array, n_steps: int) -> RunResult:
+    def _run_sync(self, key: jax.Array, n_steps: int,
+                  manager: ckpt_mod.CheckpointManager | None = None
+                  ) -> RunResult:
         cfg = self.cfg
-        state = self.dqn.init(key)
+        start = 0
+        state = None
+        if manager is not None:
+            step, snap, meta = self._restore(manager, self._sync_target(),
+                                             "sync", n_steps=n_steps)
+            if step is not None:
+                key = jax.random.wrap_key_data(snap["key_data"])
+                state, start = snap["state"], int(meta["step"])
+        if state is None:
+            state = self.dqn.init(key)
         # Same step-key derivation as the scan trainer's _train.
         keys = jax.random.split(jax.random.fold_in(key, 1), n_steps)
         returns = []
+        preempted_at = None
         t0 = time.perf_counter()
         t_first_learn = None
-        for t in range(n_steps):
-            if t == cfg.learn_start:
+        t_end = start
+        for t in range(start, n_steps):
+            if t == max(cfg.learn_start, start):
                 jax.block_until_ready(state.params)
                 t_first_learn = time.perf_counter()
             state, m = self._agent_step(state, keys[t])
             returns.append(m["return_mean"])
+            t_end = t + 1
+            if manager is not None and (manager.should_save(t + 1)
+                                        or t + 1 == n_steps):
+                manager.save(t + 1,
+                             {"key_data": jax.random.key_data(key),
+                              "state": state},
+                             meta={"mode": "sync", "step": t + 1,
+                                   "n_steps": n_steps})
+                if manager.preempted and t + 1 < n_steps:
+                    preempted_at = t + 1
+                    break
         jax.block_until_ready(state.params)
-        t_end = time.perf_counter()
+        wall_end = time.perf_counter()
         learner_steps = sum(
-            1 for t in range(n_steps)
+            1 for t in range(start, t_end)
             if t >= cfg.learn_start and t % cfg.train_every == 0)
-        learn_wall = (t_end - t_first_learn if t_first_learn is not None
+        learn_wall = (wall_end - t_first_learn if t_first_learn is not None
                       else float("nan"))
         curve = np.asarray(jnp.stack(returns)) if returns else np.zeros(0)
         metrics = {
@@ -161,12 +266,15 @@ class ReplayService:
             "learner_steps": learner_steps,
             "learner_steps_per_sec": (learner_steps / learn_wall
                                       if learner_steps else 0.0),
-            "wall_time": t_end - t0,
-            "frames": n_steps * cfg.num_envs,
-            "frames_per_sec": n_steps * cfg.num_envs / (t_end - t0),
+            "wall_time": wall_end - t0,
+            "frames": (t_end - start) * cfg.num_envs,
+            "frames_per_sec": ((t_end - start) * cfg.num_envs
+                               / max(wall_end - t0, 1e-9)),
             "return_mean": float(curve[-1]) if len(curve) else 0.0,
             "return_curve": curve,
             "staleness": {"count": 0, "mean": 0.0, "max": 0},
+            "resumed_from": start if start else None,
+            "preempted_at": preempted_at,
         }
         return RunResult(params=state.params,
                          target_params=state.target_params,
@@ -174,28 +282,83 @@ class ReplayService:
 
     # --- asynchronous mode -------------------------------------------- #
 
-    def _run_async(self, key: jax.Array, n_steps: int) -> RunResult:
+    def _run_async(self, key: jax.Array, n_steps: int,
+                   manager: ckpt_mod.CheckpointManager | None = None
+                   ) -> RunResult:
         cfg = self.cfg
-        state0 = self.dqn.init(key)
-        self._bstate = state0.buffer          # canonical replay state
-        params_box = [state0.params]          # actors read, learner swaps
+        start_steps, prefetch_draw, frames0, blocks0 = 0, 0, 0, 0
+        actor_resume = None
+        snap = None
+        if manager is not None:
+            step, snap, meta = self._restore(manager, self._async_target(),
+                                             "async",
+                                             num_actors=self.num_actors)
+            if step is not None:
+                key = jax.random.wrap_key_data(snap["key_data"])
+                start_steps = int(meta["learner_steps"])
+                prefetch_draw = int(meta["prefetch_draw"])
+                frames0 = int(meta["frames"])
+                blocks0 = int(meta["blocks"])
+                actor_resume = [
+                    {**a, "step": meta["actor_steps"][i],
+                     "chunk": meta["actor_chunks"][i]}
+                    for i, a in enumerate(snap["actors"])]
+        if snap is not None and snap.get("params") is not None:
+            params0, target0 = snap["params"], snap["target_params"]
+            opt_m0, opt_v0 = snap["opt_m"], snap["opt_v"]
+            self._bstate = snap["buffer"]
+        else:
+            state0 = self.dqn.init(key)
+            params0, target0 = state0.params, state0.target_params
+            opt_m0, opt_v0 = state0.opt_m, state0.opt_v
+            self._bstate = state0.buffer          # canonical replay state
+        chunks_base = sum(a["chunk"] for a in actor_resume) \
+            if actor_resume else 0
+        params_box = [params0]                # actors read, learner swaps
         work_q: queue.Queue = queue.Queue(self.queue_size)
+        self._work_q = work_q
         batch_q: queue.Queue = queue.Queue(self.prefetch_depth)
         stop = threading.Event()
+        gate = PauseGate()
         # Running aggregates, bounded regardless of run length; the exact
         # per-batch sequence trace is opt-in via feedback_log.
         rec = {"frames": 0, "blocks": 0,
+               "fb_enqueued": 0, "fb_applied": 0,
                "feedback_seqs": [] if self.feedback_log else None,
                "stale_n": 0, "stale_sum": 0, "stale_max": 0,
                "returns": collections.deque(maxlen=256),
                "depth_n": 0, "work_sum": 0, "batch_sum": 0, "error": None}
 
+        def feedback_put(fb):
+            ok = put_with_stop(work_q, ("feedback", fb), stop)
+            if ok:
+                rec["fb_enqueued"] += 1
+            return ok
+
+        last_saved = [start_steps]
+
+        def on_slab(params, target_params, opt_m, opt_v):
+            """Checkpoint hook, on the learner (caller) thread.  Returns
+            True to stop the learner early (preemption)."""
+            if manager is None:
+                return False
+            steps = learner.steps_done
+            preempt = manager.preempted
+            due = steps - last_saved[0] >= manager.save_interval
+            if not (preempt or due):
+                return False
+            if steps != last_saved[0] and self._snapshot(
+                    manager, steps, params, target_params, opt_m, opt_v,
+                    key, pool, prefetch, gate, stop, rec, chunks_base,
+                    frames0, blocks0):
+                last_saved[0] = steps
+            return preempt and steps < n_steps
+
         learner = Learner(
-            self._learn, in_q=batch_q,
-            feedback_put=lambda fb: put_with_stop(
-                work_q, ("feedback", fb), stop),
+            self._learn, in_q=batch_q, feedback_put=feedback_put,
             publish=lambda p: params_box.__setitem__(0, p),
-            target_sync=cfg.target_sync, stop=stop)
+            target_sync=cfg.target_sync, stop=stop,
+            start_steps=start_steps, on_slab=on_slab)
         replay_thread = threading.Thread(
             target=self._replay_loop, name="replay-core",
             args=(work_q, batch_q, stop, learner, rec), daemon=True)
@@ -204,21 +367,25 @@ class ReplayService:
             ratio, head = self.max_replay_ratio, self.min_size
 
             def budget_fn():
-                return (rec["frames"]
+                return (frames0 + rec["frames"]
                         < head + ratio * max(learner.steps_done, 1))
 
         pool = ActorPool(
             self.dqn, self._rollout, num_actors=self.num_actors,
             params_fn=lambda: params_box[0], out_q=work_q, stop=stop,
-            base_key=key, chunk_len=self.chunk_len, budget_fn=budget_fn)
+            base_key=key, chunk_len=self.chunk_len, budget_fn=budget_fn,
+            gate=gate, resume_states=actor_resume)
         prefetch = PrefetchPipeline(
             self._sample,
             state_fn=lambda: (self._bstate, learner.steps_done),
             out_q=batch_q, stop=stop, base_key=key, slab=self.slab,
-            min_size=self.min_size, device=self.device)
+            min_size=self.min_size, device=self.device,
+            beta_fn=self.dqn.beta_at, gate=gate,
+            start_draw=prefetch_draw, start_seq=start_steps)
 
         def shutdown():
             stop.set()
+            gate.resume()  # release anything parked at the gate
             pool.join(timeout=10.0)
             prefetch.join(timeout=10.0)
             replay_thread.join(timeout=10.0)
@@ -237,8 +404,7 @@ class ReplayService:
         prefetch.start()
         try:
             params, target_params = learner.run(
-                state0.params, state0.target_params,
-                state0.opt_m, state0.opt_v, n_steps)
+                params0, target0, opt_m0, opt_v0, n_steps)
             jax.block_until_ready(params)
             t_end = time.perf_counter()
         except BaseException:
@@ -250,6 +416,18 @@ class ReplayService:
             raise
         shutdown()
         raise_worker_errors()
+        preempted_at = None
+        if manager is not None:
+            if manager.preempted and learner.steps_done < n_steps:
+                preempted_at = learner.steps_done
+            if learner.steps_done != last_saved[0]:
+                # Final checkpoint: threads are joined and the replay
+                # thread drained every queue before exiting, so the state
+                # is already quiescent — no pause protocol needed.
+                self._save_snapshot(manager, learner.steps_done, params,
+                                    target_params, learner.opt_m,
+                                    learner.opt_v, key, pool, prefetch,
+                                    rec, frames0, blocks0)
 
         learn_wall = (t_end - learner.first_step_time
                       if learner.first_step_time else float("nan"))
@@ -257,11 +435,14 @@ class ReplayService:
         returns = np.asarray(rec["returns"])
         metrics = {
             "mode": "async",
-            "learner_steps": learner.steps_done,
-            "learner_steps_per_sec": (learner.steps_done / learn_wall
-                                      if learner.steps_done else 0.0),
+            "learner_steps": learner.steps_done - start_steps,
+            "total_learner_steps": learner.steps_done,
+            "learner_steps_per_sec": (
+                (learner.steps_done - start_steps) / learn_wall
+                if learner.steps_done > start_steps else 0.0),
             "wall_time": wall,
             "frames": rec["frames"],
+            "total_frames": frames0 + rec["frames"],
             "frames_per_sec": rec["frames"] / wall,
             "blocks": rec["blocks"],
             "return_mean": (float(returns[-64:].mean())
@@ -281,16 +462,85 @@ class ReplayService:
                                if rec["depth_n"] else 0.0),
             },
             "losses": [float(l) for l in learner.losses],
+            "resumed_from": start_steps if start_steps else None,
+            "preempted_at": preempted_at,
         }
         return RunResult(params=params, target_params=target_params,
                          buffer=self._bstate, metrics=metrics)
+
+    # --- snapshot protocol -------------------------------------------- #
+
+    def _snapshot(self, manager, steps, params, target_params, opt_m,
+                  opt_v, key, pool, prefetch, gate, stop, rec,
+                  chunks_base, frames0, blocks0,
+                  timeout: float = 60.0) -> bool:
+        """pause → drain → snapshot → resume (on the learner thread).
+
+        1. **pause**: the actor pool and the prefetcher park at the gate
+           at their next loop boundary (any in-flight queue put finishes
+           first; the replay thread never parks, so those puts drain).
+        2. **drain**: wait until the replay thread has applied every
+           enqueued transition block (``pool.chunks_done`` of them) and
+           every deferred priority-feedback slab the learner has emitted
+           — the canonical buffer state then reflects all experience
+           generated and all TD errors computed so far.
+        3. **snapshot**: write the quiescent state atomically; per-thread
+           PRNG stream positions are the actor chunk counters and the
+           prefetcher draw counter (keys are pure fold_ins of those).
+        4. **resume**: release the gate.
+        """
+        gate.pause()
+        try:
+            if not gate.wait_parked(self.num_actors + 1, stop, timeout):
+                return False  # stopping anyway; skip the snapshot
+            deadline = time.monotonic() + timeout
+            while not stop.is_set():
+                drained = (rec["blocks"] == pool.chunks_done - chunks_base
+                           and rec["fb_applied"] == rec["fb_enqueued"]
+                           and self._work_q.empty())
+                if drained:
+                    break
+                if time.monotonic() > deadline:
+                    raise RuntimeError(
+                        "snapshot drain did not quiesce within "
+                        f"{timeout}s (blocks {rec['blocks']}/"
+                        f"{pool.chunks_done - chunks_base}, feedback "
+                        f"{rec['fb_applied']}/{rec['fb_enqueued']})")
+                time.sleep(0.002)
+            if stop.is_set():
+                return False
+            self._save_snapshot(manager, steps, params, target_params,
+                                opt_m, opt_v, key, pool, prefetch, rec,
+                                frames0, blocks0)
+            return True
+        finally:
+            gate.resume()
+
+    def _save_snapshot(self, manager, steps, params, target_params,
+                       opt_m, opt_v, key, pool, prefetch, rec,
+                       frames0, blocks0) -> None:
+        run_states = pool.run_states()
+        snap = {"key_data": jax.random.key_data(key),
+                "params": params, "target_params": target_params,
+                "opt_m": opt_m, "opt_v": opt_v, "buffer": self._bstate,
+                "actors": [{"env_state": rs["env_state"], "obs": rs["obs"],
+                            "ep_ret": rs["ep_ret"]} for rs in run_states]}
+        meta = {"mode": "async", "learner_steps": int(steps),
+                "num_actors": self.num_actors,
+                "prefetch_draw": int(prefetch.draws),
+                "frames": int(frames0 + rec["frames"]),
+                "blocks": int(blocks0 + rec["blocks"]),
+                "actor_steps": [int(rs["step"]) for rs in run_states],
+                "actor_chunks": [int(rs["chunk"]) for rs in run_states]}
+        manager.save(int(steps), snap, meta=meta)
 
     def _replay_loop(self, work_q: queue.Queue, batch_q: queue.Queue,
                      stop: threading.Event, learner: Learner,
                      rec: dict) -> None:
         """The one owner of the canonical replay state: applies transition
         blocks and deferred priority feedback in arrival order, publishes
-        immutable snapshots for the prefetcher."""
+        immutable snapshots for the prefetcher.  Never parks at the pause
+        gate — during a snapshot it is the thread doing the draining."""
         try:
             bstate = self._bstate
             while True:
@@ -300,8 +550,13 @@ class ReplayService:
                     if stop.is_set() and learner.finished and work_q.empty():
                         return
                     continue
+                # Ordering contract with the snapshot drain check: publish
+                # the new canonical state BEFORE bumping the applied
+                # counters, so "counters say drained" implies the saved
+                # self._bstate already contains the counted item.
                 if tag == "block":
                     bstate = self._add_block(bstate, item.transitions)
+                    self._bstate = bstate
                     rec["frames"] += item.frames
                     rec["blocks"] += 1
                     rec["returns"].extend(item.completed_returns.tolist())
@@ -309,6 +564,7 @@ class ReplayService:
                     fb: Feedback = item
                     bstate = self._apply_feedback(
                         bstate, fb.idx, fb.td, fb.stamp)
+                    self._bstate = bstate
                     s = int(fb.idx.shape[0])
                     if rec["feedback_seqs"] is not None:
                         rec["feedback_seqs"].extend(
@@ -317,7 +573,7 @@ class ReplayService:
                     rec["stale_n"] += s
                     rec["stale_sum"] += stale * s
                     rec["stale_max"] = max(rec["stale_max"], stale)
-                self._bstate = bstate
+                    rec["fb_applied"] += 1
                 rec["depth_n"] += 1
                 rec["work_sum"] += work_q.qsize()
                 rec["batch_sum"] += batch_q.qsize()

@@ -1,18 +1,33 @@
-"""Fault-tolerant checkpointing: atomic saves, retention, elastic restore.
+"""Fault-tolerant checkpointing: atomic + durable saves, retention,
+validated elastic restore.
 
 Design (single-controller; the multi-host generalisation saves one shard
 file per process and an index, orbax-style — documented in DESIGN.md):
 
 * ``save`` writes ``step_<n>.tmp/`` then os.replace()-renames to
   ``step_<n>/`` — a crash mid-write never corrupts the latest checkpoint.
+  Every payload file is fsync'd, and so are the tmp dir and the parent
+  dir around the rename, so the checkpoint survives power loss, not just
+  process death (the rename alone is NOT durable on ext4/xfs without the
+  directory fsync).
 * arrays are stored as one ``.npz`` plus a JSON manifest of the pytree
   structure + dtypes, so restore works WITHOUT the original code object.
+  ``save(..., meta=...)`` embeds an arbitrary JSON-able dict in the
+  manifest (counters, config fingerprints); ``load_meta`` reads it back
+  without touching the arrays.
+* ``restore`` validates the manifest's leaf names and dtypes against the
+  target tree and fails with a readable diff — leaves are never matched
+  by position alone, so restoring a checkpoint into the wrong structure
+  (different sampler kind, refactored params tree) is a loud error, not
+  silently transposed arrays.
 * ``restore`` device_puts each leaf with the *target* sharding: restoring
   onto a different mesh (elastic rescale 256 -> 512 chips, or CPU debug)
   is just a different sharding argument — checkpoints are mesh-agnostic.
 * ``CheckpointManager`` keeps the newest ``keep`` checkpoints, resumes
-  from the latest valid one, and installs a SIGTERM hook (preemption)
-  that flushes a final checkpoint before exit.
+  from the latest valid one, garbage-collects ``step_*.tmp`` litter from
+  crashed saves, and exposes a preemption flag that a SIGTERM hook sets
+  when installable (main thread) and that worker threads reach through
+  ``request_preemption()`` or the polled ``PREEMPT`` sentinel file.
 """
 from __future__ import annotations
 
@@ -21,6 +36,7 @@ import os
 import re
 import shutil
 import signal
+import threading
 from typing import Any, Optional
 
 import jax
@@ -34,6 +50,8 @@ _VIEW_DTYPES = {
     "float8_e4m3fn": np.uint8,
     "float8_e5m2": np.uint8,
 }
+
+PREEMPT_SENTINEL = "PREEMPT"
 
 
 def _to_storable(arr: np.ndarray) -> np.ndarray:
@@ -57,8 +75,46 @@ def _flatten_with_names(tree: Any):
     return names, leaves, treedef
 
 
-def save(directory: str, step: int, tree: Any) -> str:
-    """Atomic checkpoint write. Returns the final path."""
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _leaf_dtype_name(leaf: Any) -> str:
+    if hasattr(leaf, "dtype"):
+        return np.dtype(leaf.dtype).name
+    # Python scalars (e.g. a static int field of a sampler-state
+    # NamedTuple) canonicalize the way jit would (int -> int32 under
+    # default x64-disabled config), so a live init() tree and a post-jit
+    # tree validate identically.
+    return jax.numpy.asarray(leaf).dtype.name
+
+
+def _leaf_storable(leaf: Any) -> np.ndarray:
+    if isinstance(leaf, (bool, int, float, complex)):
+        return np.asarray(jax.numpy.asarray(leaf))
+    return np.asarray(leaf)
+
+
+def save(directory: str, step: int, tree: Any,
+         meta: dict | None = None) -> str:
+    """Atomic, durable checkpoint write. Returns the final path.
+
+    ``meta``: optional JSON-able dict stored in the manifest (host-side
+    counters, PRNG stream positions, config fingerprints) — read back
+    cheaply with :func:`load_meta`.
+    """
     os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:010d}")
     tmp = final + ".tmp"
@@ -66,20 +122,33 @@ def save(directory: str, step: int, tree: Any) -> str:
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     names, leaves, _ = _flatten_with_names(tree)
-    raw = [np.asarray(leaf) for leaf in leaves]
+    raw = [_leaf_storable(leaf) for leaf in leaves]
     arrays = {f"a{i}": _to_storable(a) for i, a in enumerate(raw)}
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    arrays_path = os.path.join(tmp, "arrays.npz")
+    with open(arrays_path, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
     manifest = {
         "step": step,
         "names": names,
         "dtypes": [a.dtype.name for a in raw],
         "shapes": [list(a.shape) for a in raw],
     }
+    if meta is not None:
+        manifest["meta"] = meta
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    # The rename is only durable once the directory entries themselves
+    # are on disk: fsync the tmp dir (its two new files), then the
+    # parent (the rename).
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
+    _fsync_dir(directory)
     return final
 
 
@@ -94,13 +163,87 @@ def available_steps(directory: str) -> list[int]:
     return sorted(out)
 
 
+def gc_stale_tmp(directory: str) -> list[str]:
+    """Remove ``step_*.tmp`` litter left behind by crashed saves.
+
+    Only call when no save is concurrently in flight in this directory
+    (the manager calls it at construction and right after each completed
+    save). Returns the removed paths.
+    """
+    if not os.path.isdir(directory):
+        return []
+    removed = []
+    for d in os.listdir(directory):
+        if re.fullmatch(r"step_\d+\.tmp", d):
+            path = os.path.join(directory, d)
+            shutil.rmtree(path, ignore_errors=True)
+            removed.append(path)
+    return removed
+
+
+def load_manifest(directory: str, step: int) -> dict:
+    path = os.path.join(directory, f"step_{step:010d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def load_meta(directory: str, step: int) -> dict:
+    """The ``meta`` dict stored at save time ({} if none was)."""
+    return load_manifest(directory, step).get("meta", {})
+
+
+def _validate_manifest(manifest: dict, names: list[str],
+                       leaves: list[Any], path: str) -> None:
+    """Leaf-name + dtype agreement between checkpoint and target tree.
+
+    Position-only matching silently loads array i into leaf i even when
+    the structures diverge (e.g. a checkpoint of one sampler kind
+    restored into another with the same leaf count); fail with a diff of
+    the first mismatches instead.
+    """
+    saved_names = manifest.get("names")
+    if saved_names is not None and saved_names != names:
+        diffs = []
+        for i in range(max(len(saved_names), len(names))):
+            s = saved_names[i] if i < len(saved_names) else "<absent>"
+            t = names[i] if i < len(names) else "<absent>"
+            if s != t:
+                diffs.append(f"  leaf {i}: checkpoint={s!r} target={t!r}")
+            if len(diffs) >= 10:
+                diffs.append("  ...")
+                break
+        raise ValueError(
+            f"checkpoint {path} does not match the target tree structure "
+            f"({len(saved_names)} vs {len(names)} leaves):\n"
+            + "\n".join(diffs))
+    saved_dtypes = manifest.get("dtypes", [])
+    mismatches = []
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        want = _leaf_dtype_name(leaf)
+        got = saved_dtypes[i] if i < len(saved_dtypes) else "<absent>"
+        if got != want:
+            mismatches.append(f"  {name}: checkpoint={got} target={want}")
+        if len(mismatches) >= 10:
+            mismatches.append("  ...")
+            break
+    if mismatches:
+        raise ValueError(
+            f"checkpoint {path} dtype mismatch against target tree:\n"
+            + "\n".join(mismatches))
+
+
 def restore(directory: str, step: int, target: Any,
             shardings: Any = None) -> Any:
     """Load into the structure of ``target`` (arrays or ShapeDtypeStructs).
 
+    The manifest's leaf names and dtypes are validated against ``target``
+    first — a structural mismatch raises with a readable diff instead of
+    silently loading arrays by position.
+
     ``shardings``: optional pytree of NamedShardings (elastic resharding —
     the saved mesh is irrelevant, each leaf is device_put with the target
-    sharding).
+    sharding, so a table saved on 8 shards restores onto 2, or onto one
+    CPU device, unchanged).
     """
     path = os.path.join(directory, f"step_{step:010d}")
     with open(os.path.join(path, "manifest.json")) as f:
@@ -112,39 +255,96 @@ def restore(directory: str, step: int, target: Any,
     if len(arrays) != len(leaves):
         raise ValueError(f"checkpoint has {len(arrays)} leaves, "
                          f"target expects {len(leaves)}")
+    _validate_manifest(manifest, names, leaves, path)
     shard_leaves = (jax.tree.leaves(shardings) if shardings is not None
                     else [None] * len(leaves))
+    if len(shard_leaves) != len(leaves):
+        # jax pytrees drop None leaves, so a shardings tree with Nones
+        # would silently misalign with the target — fail loudly instead.
+        raise ValueError(
+            f"shardings tree has {len(shard_leaves)} leaves, target has "
+            f"{len(leaves)}; use a replicated sharding (not None) for "
+            f"leaves that should not be partitioned")
     out = []
     for arr, tgt, sh in zip(arrays, leaves, shard_leaves):
-        arr = arr.astype(tgt.dtype)
-        if tuple(arr.shape) != tuple(tgt.shape):
-            raise ValueError(f"shape mismatch {arr.shape} vs {tgt.shape}")
-        out.append(jax.device_put(arr, sh) if sh is not None else jax.numpy.asarray(arr))
+        if tuple(arr.shape) != tuple(np.shape(tgt)):
+            raise ValueError(f"shape mismatch {arr.shape} vs {np.shape(tgt)}")
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
 class CheckpointManager:
+    """Retention + resume + preemption plumbing around :func:`save`.
+
+    The preemption flag has three writers, so it works from any thread
+    and any process topology:
+
+    * ``install_preemption_hook()`` — SIGTERM handler; only installable
+      on the main thread (``signal.signal`` raises ``ValueError``
+      elsewhere), so off the main thread it silently degrades to the
+      polled mechanisms below and returns False.
+    * ``request_preemption()`` — direct flag set, for same-process
+      callers (e.g. a watchdog thread or a test).
+    * a ``PREEMPT`` sentinel file in the checkpoint directory — the
+      cross-process polled fallback; ``preempted`` checks it on read,
+      so an operator (or an orchestrator without signal delivery into
+      the worker thread) can ``touch <dir>/PREEMPT``.  The sentinel is
+      one-shot: a freshly constructed manager consumes (deletes) it, so
+      the relaunch after a sentinel-triggered exit resumes instead of
+      immediately preempting itself again.
+    """
+
     def __init__(self, directory: str, keep: int = 3,
                  save_interval: int = 100):
         self.directory = directory
         self.keep = keep
         self.save_interval = save_interval
         self._preempted = False
+        gc_stale_tmp(directory)
+        try:
+            os.unlink(self._sentinel_path)  # consume a stale sentinel
+        except OSError:
+            pass
 
-    def install_preemption_hook(self):
+    def install_preemption_hook(self, signum: int = signal.SIGTERM) -> bool:
+        """Install the SIGTERM handler if possible; returns whether it was.
+
+        ``signal.signal`` raises ``ValueError`` off the main thread (the
+        async runtime's learner runs on a worker thread), so the fallback
+        is the polled flag: ``request_preemption()`` or the ``PREEMPT``
+        sentinel file still flip ``preempted``.
+        """
         def handler(signum, frame):
             self._preempted = True
-        signal.signal(signal.SIGTERM, handler)
+
+        if threading.current_thread() is not threading.main_thread():
+            return False
+        try:
+            signal.signal(signum, handler)
+        except ValueError:
+            return False
+        return True
+
+    def request_preemption(self) -> None:
+        """Thread-safe direct preemption request (no signal needed)."""
+        self._preempted = True
+
+    @property
+    def _sentinel_path(self) -> str:
+        return os.path.join(self.directory, PREEMPT_SENTINEL)
 
     @property
     def preempted(self) -> bool:
+        if not self._preempted and os.path.exists(self._sentinel_path):
+            self._preempted = True
         return self._preempted
 
     def should_save(self, step: int) -> bool:
-        return self._preempted or (step > 0 and step % self.save_interval == 0)
+        return self.preempted or (step > 0 and step % self.save_interval == 0)
 
-    def save(self, step: int, tree: Any) -> str:
-        path = save(self.directory, step, tree)
+    def save(self, step: int, tree: Any, meta: dict | None = None) -> str:
+        path = save(self.directory, step, tree, meta=meta)
         self._gc()
         return path
 
@@ -158,7 +358,12 @@ class CheckpointManager:
             return None, None
         return step, restore(self.directory, step, target, shardings)
 
+    def latest_meta(self) -> dict:
+        step = self.latest_step()
+        return load_meta(self.directory, step) if step is not None else {}
+
     def _gc(self):
+        gc_stale_tmp(self.directory)
         steps = available_steps(self.directory)
         for s in steps[:-self.keep]:
             shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),

@@ -1,7 +1,9 @@
-"""Fault tolerance: atomic checkpointing, retention, bitwise resume."""
+"""Fault tolerance: atomic checkpointing, retention, bitwise resume,
+manifest validation, preemption plumbing."""
 import os
 import subprocess
 import sys
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +68,94 @@ def test_shape_mismatch_raises(tmp_path):
     with pytest.raises(ValueError):
         ck.restore(str(tmp_path), 1,
                    {"a": jax.ShapeDtypeStruct((4,), jnp.float32)})
+
+
+def test_restore_wrong_names_raises_with_diff(tmp_path):
+    """Leaves must never be matched by position alone: same leaf count,
+    different structure -> a readable name diff, not transposed loads."""
+    ck.save(str(tmp_path), 1, {"a": jnp.zeros(3), "b": jnp.ones(3)})
+    with pytest.raises(ValueError, match="'b'.*'c'"):
+        ck.restore(str(tmp_path), 1,
+                   {"a": jax.ShapeDtypeStruct((3,), jnp.float32),
+                    "c": jax.ShapeDtypeStruct((3,), jnp.float32)})
+
+
+def test_restore_dtype_mismatch_raises(tmp_path):
+    ck.save(str(tmp_path), 1, {"a": jnp.zeros(3, jnp.float32)})
+    with pytest.raises(ValueError, match="dtype mismatch"):
+        ck.restore(str(tmp_path), 1,
+                   {"a": jax.ShapeDtypeStruct((3,), jnp.int32)})
+
+
+def test_restore_namedtuple_field_names_validated(tmp_path):
+    """Different NamedTuple state types with the same leaf count must not
+    silently cross-load (the sampler-state hazard)."""
+    from repro.core.amper import AmperConfig, AmperSampler
+    from repro.core.per import SumTreePER
+
+    ck.save(str(tmp_path), 1, SumTreePER(8).init())
+    amper = AmperSampler(AmperConfig(capacity=8))
+    with pytest.raises(ValueError):
+        ck.restore(str(tmp_path), 1, jax.eval_shape(amper.init))
+
+
+def test_meta_roundtrip(tmp_path):
+    ck.save(str(tmp_path), 5, tree(),
+            meta={"mode": "async", "draw": 17})
+    assert ck.load_meta(str(tmp_path), 5) == {"mode": "async", "draw": 17}
+    assert ck.load_meta(str(tmp_path), 5).get("absent") is None
+
+
+def test_manager_gcs_stale_tmp_dirs(tmp_path):
+    """step_*.tmp litter from a crashed save is collected, finished
+    checkpoints are untouched."""
+    mgr = ck.CheckpointManager(str(tmp_path), keep=3, save_interval=1)
+    mgr.save(1, tree())
+    os.makedirs(tmp_path / "step_0000000002.tmp")
+    mgr.save(3, tree())  # _gc runs after each save
+    names = os.listdir(tmp_path)
+    assert not any(n.endswith(".tmp") for n in names)
+    assert ck.available_steps(str(tmp_path)) == [1, 3]
+    # construction-time GC too
+    os.makedirs(tmp_path / "step_0000000009.tmp")
+    ck.CheckpointManager(str(tmp_path))
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+def test_preemption_hook_from_worker_thread_degrades(tmp_path):
+    """signal.signal raises ValueError off the main thread — the manager
+    must NOT: it returns False and stays usable via the polled flag."""
+    mgr = ck.CheckpointManager(str(tmp_path))
+    out = {}
+
+    def worker():
+        out["installed"] = mgr.install_preemption_hook()
+
+    t = threading.Thread(target=worker)
+    t.start()
+    t.join()
+    assert out["installed"] is False
+    assert not mgr.preempted
+    mgr.request_preemption()
+    assert mgr.preempted
+    assert mgr.should_save(1)
+
+
+def test_preemption_sentinel_file_polled(tmp_path):
+    mgr = ck.CheckpointManager(str(tmp_path))
+    assert not mgr.preempted
+    open(os.path.join(str(tmp_path), ck.PREEMPT_SENTINEL), "w").close()
+    assert mgr.preempted
+
+
+def test_preemption_sentinel_is_one_shot(tmp_path):
+    """The relaunch after a sentinel-triggered exit must resume, not
+    immediately preempt itself: a fresh manager consumes the file."""
+    open(os.path.join(str(tmp_path), ck.PREEMPT_SENTINEL), "w").close()
+    mgr = ck.CheckpointManager(str(tmp_path))
+    assert not mgr.preempted
+    assert not os.path.exists(os.path.join(str(tmp_path),
+                                           ck.PREEMPT_SENTINEL))
 
 
 @pytest.mark.slow

@@ -1,0 +1,232 @@
+"""Crash-resume: a checkpointed, killed, and resumed run must equal an
+uninterrupted one — bit-for-bit in sync mode, tolerance-level in async —
+plus the β-annealing schedule satellite."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.per import beta_schedule, importance_weights
+from repro.core.replay_buffer import ReplayBuffer
+from repro.core.samplers import make_sampler
+from repro.rl.dqn import DQNConfig, make_dqn
+from repro.runtime import ReplayService
+from repro.train.checkpoint import CheckpointManager
+
+CFG = DQNConfig(num_envs=2, replay_size=256, batch=16, learn_start=30,
+                eps_decay_steps=200, target_sync=25, beta_end=1.0)
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --- sync mode: bit-identical kill/resume ------------------------------------
+
+
+def test_sync_service_kill_resume_bit_identical(tmp_path):
+    """Acceptance pin: checkpointed + killed + resumed == uninterrupted,
+    bitwise, for final params AND full replay state."""
+    n = 80
+    key = jax.random.key(3)
+    svc = ReplayService(CFG, sync=True, num_actors=1)
+    res_uninterrupted = svc.run(key, n)
+
+    mgr = CheckpointManager(str(tmp_path), save_interval=25)
+    mgr.request_preemption()          # "kill" at the first checkpoint
+    r1 = svc.run(key, n, manager=mgr)
+    assert r1.metrics["preempted_at"] is not None
+    assert r1.metrics["preempted_at"] < n
+
+    r2 = svc.run(key, n, manager=CheckpointManager(str(tmp_path),
+                                                   save_interval=25))
+    assert r2.metrics["resumed_from"] == r1.metrics["preempted_at"]
+    _assert_trees_equal(res_uninterrupted.params, r2.params)
+    _assert_trees_equal(res_uninterrupted.target_params, r2.target_params)
+    _assert_trees_equal(res_uninterrupted.buffer, r2.buffer)
+
+
+def test_sync_resume_kill_at_random_wall_time(tmp_path):
+    """The kill point must not matter: preempt from a watchdog thread at
+    an arbitrary wall-clock moment, resume, and still match bitwise."""
+    n = 60
+    key = jax.random.key(5)
+    svc = ReplayService(CFG, sync=True, num_actors=1)
+    baseline = svc.run(key, n)
+    mgr = CheckpointManager(str(tmp_path), save_interval=10)
+    killer = threading.Timer(0.05, mgr.request_preemption)
+    killer.start()
+    svc.run(key, n, manager=mgr)
+    killer.cancel()
+    r2 = svc.run(key, n, manager=CheckpointManager(str(tmp_path),
+                                                   save_interval=10))
+    _assert_trees_equal(baseline.params, r2.params)
+    _assert_trees_equal(baseline.buffer, r2.buffer)
+
+
+def test_sync_resume_with_different_n_steps_raises(tmp_path):
+    svc = ReplayService(CFG, sync=True, num_actors=1)
+    mgr = CheckpointManager(str(tmp_path), save_interval=10)
+    mgr.request_preemption()
+    svc.run(jax.random.key(0), 40, manager=mgr)
+    with pytest.raises(ValueError, match="n_steps"):
+        svc.run(jax.random.key(0), 50,
+                manager=CheckpointManager(str(tmp_path)))
+
+
+def test_train_ckpt_relaunch_after_completion_is_idempotent(tmp_path):
+    """Regression: rerunning the documented auto-resume command after
+    the run already finished must return the final state, not crash."""
+    dqn = make_dqn(CFG)
+    key, n = jax.random.key(2), 40
+    mgr = CheckpointManager(str(tmp_path), save_interval=20)
+    st1, _, done1 = dqn.train_ckpt(key, n, mgr)
+    assert done1 == n
+    st2, metrics, done2 = dqn.train_ckpt(
+        key, n, CheckpointManager(str(tmp_path), save_interval=20))
+    assert done2 == n
+    assert metrics["return_mean"].shape == (0,)
+    _assert_trees_equal(st1, st2)
+
+
+def test_train_ckpt_kill_resume_bit_identical(tmp_path):
+    """Same pin for the scan trainer's checkpoint hook."""
+    dqn = make_dqn(CFG)
+    key, n = jax.random.key(1), 70
+    st_a, _, done = dqn.train_ckpt(
+        key, n, CheckpointManager(str(tmp_path / "a"), save_interval=30))
+    assert done == n
+    mgr = CheckpointManager(str(tmp_path / "b"), save_interval=30)
+    mgr.request_preemption()
+    _, _, done1 = dqn.train_ckpt(key, n, mgr)
+    assert done1 < n
+    st_b, _, done2 = dqn.train_ckpt(
+        key, n, CheckpointManager(str(tmp_path / "b"), save_interval=30))
+    assert done2 == n
+    _assert_trees_equal(st_a, st_b)
+
+
+# --- async mode: snapshot / resume -------------------------------------------
+
+
+def _async_service(**kw):
+    cfg = DQNConfig(sampler="amper-fr", num_envs=2, replay_size=256,
+                    batch=16, learn_start=8, eps_decay_steps=200,
+                    target_sync=50, v_max=8.0, beta_end=1.0)
+    return ReplayService(cfg, num_actors=2, chunk_len=4, slab=2,
+                         queue_size=4, max_replay_ratio=64, **kw)
+
+
+def test_async_kill_resume_completes_and_feedback_stays_exact(tmp_path):
+    """Kill the async service mid-run, resume from the latest snapshot:
+    the resumed run finishes the remaining learner steps, keeps the
+    exactly-once/in-order deferred-feedback contract across the resume
+    boundary, and produces finite, evaluable params."""
+    n = 40
+    mgr = CheckpointManager(str(tmp_path), save_interval=8)
+    mgr.request_preemption()          # kill at the first slab boundary
+    svc = _async_service()
+    r1 = svc.run(jax.random.key(1), n, manager=mgr)
+    cut = r1.metrics["preempted_at"]
+    assert cut is not None and 0 < cut < n
+
+    svc2 = _async_service(feedback_log=True)
+    r2 = svc2.run(jax.random.key(1), n,
+                  manager=CheckpointManager(str(tmp_path), save_interval=100))
+    m = r2.metrics
+    assert m["resumed_from"] == cut
+    assert m["total_learner_steps"] == n
+    # feedback sequence numbers continue gaplessly from the cut point
+    assert m["feedback_seqs"] == list(range(cut, n)), m["feedback_seqs"]
+    assert int(r2.buffer.size) > 0
+    assert int(r2.buffer.total_adds) >= int(r1.buffer.total_adds)
+    score = float(svc2.dqn.evaluate(r2.params, jax.random.key(2), 3))
+    assert np.isfinite(score)
+    for leaf in jax.tree.leaves(r2.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+def test_async_final_return_within_tolerance_of_uninterrupted(tmp_path):
+    """Async resume is not bitwise (thread interleaving differs), but a
+    killed+resumed run must land in the same performance regime as an
+    uninterrupted one at smoke scale."""
+    n = 60
+    base = _async_service().run(jax.random.key(4), n)
+    mgr = CheckpointManager(str(tmp_path), save_interval=10)
+    killer = threading.Timer(0.2, mgr.request_preemption)
+    killer.start()
+    svc = _async_service()
+    svc.run(jax.random.key(4), n, manager=mgr)
+    killer.cancel()
+    r2 = _async_service().run(
+        jax.random.key(4), n,
+        manager=CheckpointManager(str(tmp_path), save_interval=1000))
+    assert r2.metrics["total_learner_steps"] == n
+    # same regime: both losses finite, both evaluable
+    s_base = float(_async_service().dqn.evaluate(base.params,
+                                                 jax.random.key(8), 3))
+    s_res = float(_async_service().dqn.evaluate(r2.params,
+                                                jax.random.key(8), 3))
+    assert np.isfinite(s_base) and np.isfinite(s_res)
+
+
+def test_async_periodic_snapshots_do_not_change_liveness(tmp_path):
+    """Periodic pause->drain->snapshot->resume cycles must not wedge the
+    pipeline: the run completes with frequent snapshots enabled."""
+    mgr = CheckpointManager(str(tmp_path), save_interval=4)
+    r = _async_service().run(jax.random.key(2), 20, manager=mgr)
+    assert r.metrics["total_learner_steps"] == 20
+    assert mgr.latest_step() == 20
+
+
+def test_async_resume_actor_count_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), save_interval=8)
+    mgr.request_preemption()
+    _async_service().run(jax.random.key(1), 20, manager=mgr)
+    cfg = _async_service().cfg
+    svc3 = ReplayService(cfg, num_actors=3, chunk_len=4, slab=2)
+    with pytest.raises(ValueError, match="num_actors"):
+        svc3.run(jax.random.key(1), 20,
+                 manager=CheckpointManager(str(tmp_path)))
+
+
+# --- β annealing satellite ---------------------------------------------------
+
+
+def test_beta_schedule_anneals_to_one():
+    assert float(beta_schedule(0.4, 1.0, jnp.int32(0), 100)) == pytest.approx(0.4)
+    assert float(beta_schedule(0.4, 1.0, jnp.int32(50), 100)) == pytest.approx(0.7)
+    assert float(beta_schedule(0.4, 1.0, jnp.int32(100), 100)) == pytest.approx(1.0)
+    assert float(beta_schedule(0.4, 1.0, jnp.int32(10**6), 100)) == pytest.approx(1.0)
+
+
+def test_dqn_beta_at_defaults_and_annealed():
+    frozen = make_dqn(DQNConfig())            # beta_end None -> constant
+    assert frozen.beta_at(10**9) == DQNConfig().beta
+    annealed = make_dqn(DQNConfig(beta_end=1.0, beta_anneal_steps=100))
+    assert float(annealed.beta_at(jnp.int32(100))) == pytest.approx(1.0)
+    assert float(annealed.beta_at(jnp.int32(0))) == pytest.approx(0.4)
+
+
+def test_replay_sample_beta_override_matches_importance_weights():
+    rb = ReplayBuffer(64, make_sampler("per-cumsum", 64))
+    st = rb.init({"x": jnp.float32(0)})
+    st = rb.add_batch(st, {"x": jnp.arange(64, dtype=jnp.float32)})
+    st = rb.update_priorities(st, jnp.arange(64),
+                              jnp.linspace(0.1, 3.0, 64))
+    key = jax.random.key(0)
+    for beta in (0.4, 1.0):
+        idx, _, w = rb.sample(st, key, 16, beta=jnp.float32(beta))
+        prios = rb.sampler.priorities(st.sampler_state)
+        expect = importance_weights(prios, idx, jnp.maximum(st.size, 1), beta)
+        np.testing.assert_allclose(np.asarray(w), np.asarray(expect),
+                                   rtol=1e-6)
+    # beta=1 fully compensates: low-priority rows get the largest weights
+    idx, _, w1 = rb.sample(st, key, 16, beta=jnp.float32(1.0))
+    _, _, w0 = rb.sample(st, key, 16, beta=jnp.float32(0.0))
+    np.testing.assert_allclose(np.asarray(w0), 1.0)  # no correction at 0
+    assert np.asarray(w1).std() > 0                  # real correction at 1
