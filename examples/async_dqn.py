@@ -31,6 +31,12 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--env", default="cartpole", choices=available_envs())
 ap.add_argument("--sampler", default="amper-fr",
                 help="any repro.core.samplers registry name")
+ap.add_argument("--agent", default="dqn",
+                choices=("dqn", "double", "dueling", "double-dueling"),
+                help="agent variant (Q-head x target rule)")
+ap.add_argument("--n-step", type=int, default=1,
+                help="n-step return horizon (each actor aggregates its "
+                     "own stream)")
 ap.add_argument("--steps", type=int, default=2000,
                 help="learner steps (scan iterations with --sync)")
 ap.add_argument("--num-envs", type=int, default=16,
@@ -60,7 +66,8 @@ REPLAY_RATIO = 4  # frames per learner step, in units of num_envs
 decay = max(args.steps // 2, 1) * (1 if args.sync else REPLAY_RATIO)
 # β anneals in LEARNER steps (the unit beta_at is evaluated in, sync or
 # async), so its horizon is --steps — NOT the frame-scaled eps decay.
-cfg = DQNConfig(env=args.env, sampler=args.sampler, num_envs=args.num_envs,
+cfg = DQNConfig(env=args.env, sampler=args.sampler, agent=args.agent,
+                n_step=args.n_step, num_envs=args.num_envs,
                 replay_size=args.replay, learn_start=50,
                 eps_decay_steps=decay, target_sync=100, v_max=8.0,
                 beta_end=args.beta_end,

@@ -20,6 +20,11 @@ from repro.rl.envs import available_envs
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=6000)
 ap.add_argument("--env", default="cartpole", choices=available_envs())
+ap.add_argument("--agent", default="dqn",
+                choices=("dqn", "double", "dueling", "double-dueling"),
+                help="agent variant (Q-head x target rule)")
+ap.add_argument("--n-step", type=int, default=1,
+                help="n-step return horizon")
 ap.add_argument("--num-envs", type=int, default=1,
                 help="parallel environments per iteration")
 ap.add_argument("--replay", type=int, default=2000)
@@ -27,10 +32,12 @@ ap.add_argument("--seed", type=int, default=0)
 args = ap.parse_args()
 
 frames = args.steps * args.num_envs
+print(f"agent={args.agent} n_step={args.n_step}")
 print(f"{'sampler':14s} {'train(last64)':>14s} {'test(10ep)':>11s} "
       f"{'sec':>6s} {'frames/s':>9s}")
 for sampler in ("uniform", "per-sumtree", "amper-k", "amper-fr"):
-    cfg = DQNConfig(env=args.env, sampler=sampler, replay_size=args.replay,
+    cfg = DQNConfig(env=args.env, sampler=sampler, agent=args.agent,
+                    n_step=args.n_step, replay_size=args.replay,
                     num_envs=args.num_envs,
                     eps_decay_steps=args.steps // 2, learn_start=200)
     dqn = make_dqn(cfg)

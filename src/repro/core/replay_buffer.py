@@ -25,6 +25,18 @@ recycled by newer experience must not clobber the newcomer's priority;
 passing the sample-time stamps to :meth:`ReplayBuffer.update_priorities`
 turns it into an out-of-band write that silently drops exactly those
 stale rows.
+
+With ``n_step > 1`` the buffer stores *n-step* transitions: a per-env
+:class:`NStepAccumulator` (its state rides inside ``ReplayState``, so it
+checkpoints with the buffer) converts the incoming 1-step stream into
+n-step rows — ``reward`` becomes the discounted n-step return truncated
+at the first episode boundary inside the window, ``next_obs`` the
+observation the TD target bootstraps from (``gamma**n_step`` at the
+learner), and ``done`` whether any step of the window terminated.  The
+emitted rows keep the 1-step schema, so storage layout, samplers, and
+checkpoints are unchanged.  The async runtime feeds its own per-actor
+accumulator (each actor is an independent env stream) and hands the
+buffer pre-aggregated rows via ``add_block(..., aggregated=True)``.
 """
 from __future__ import annotations
 
@@ -37,6 +49,83 @@ from repro.core.per import importance_weights
 from repro.core.samplers import masked_update
 
 
+class NStepState(NamedTuple):
+    """Per-env-stream window of the last ``n`` 1-step transitions.
+
+    All envs of one stream step in lockstep, so one scalar cursor pair
+    serves the whole ``[num_envs]`` batch; ``ring`` leaves lead with
+    ``[n, num_envs]``.
+    """
+
+    ring: Any         # transition pytree, leaves [n, num_envs, ...]
+    count: jax.Array  # int32 pushes so far, saturating at n
+    pos: jax.Array    # int32 next ring slot (== oldest entry once full)
+
+
+class NStepAccumulator:
+    """Pure, jittable n-step transition aggregator (per env stream).
+
+    Push one vectorized 1-step transition batch per call; once the
+    window holds ``n`` steps, each push also emits the n-step transition
+    whose *first* step is the oldest window entry:
+
+      ``reward``   = sum_k gamma^k r_k, truncated at the first ``done``
+                     inside the window (steps past it belong to the next
+                     episode and must not leak in);
+      ``next_obs`` = the pre-reset observation of the truncating step
+                     (or of the newest step when no episode ended);
+      ``done``     = did any window step terminate (no bootstrap then).
+
+    The learner bootstraps the un-terminated case with ``gamma**n``.
+    Emission validity is a traced scalar (all envs warm up in lockstep),
+    so callers gate the ring write with one ``lax.cond``.
+    """
+
+    def __init__(self, n_step: int, gamma: float):
+        if n_step < 2:
+            raise ValueError(f"NStepAccumulator needs n_step >= 2, got "
+                             f"{n_step} (use the buffer directly for 1)")
+        self.n = n_step
+        self.gamma = gamma
+
+    def init(self, example_transition: Any, num_envs: int) -> NStepState:
+        ring = jax.tree.map(
+            lambda x: jnp.zeros((self.n, num_envs) + jnp.shape(x),
+                                jnp.asarray(x).dtype),
+            example_transition)
+        return NStepState(ring=ring, count=jnp.int32(0), pos=jnp.int32(0))
+
+    def push(self, state: NStepState, transitions: Any
+             ) -> tuple[NStepState, Any, jax.Array]:
+        """-> (state, emitted n-step rows [num_envs, ...], valid scalar).
+
+        ``emitted`` holds garbage until ``valid`` (count reached n);
+        gate the write on it.
+        """
+        ring = jax.tree.map(lambda buf, x: buf.at[state.pos].set(x),
+                            state.ring, transitions)
+        pos = (state.pos + 1) % self.n
+        count = jnp.minimum(state.count + 1, self.n)
+        new = NStepState(ring=ring, count=count, pos=pos)
+        # Window in chronological order: once full, `pos` is the oldest.
+        order = (pos + jnp.arange(self.n, dtype=jnp.int32)) % self.n
+        w = jax.tree.map(lambda buf: buf[order], ring)
+        d = w["done"]                                    # [n, E]
+        cont = jnp.cumprod(1.0 - d, axis=0)              # alive after k
+        cont_before = jnp.concatenate(
+            [jnp.ones_like(cont[:1]), cont[:-1]], axis=0)
+        disc = (self.gamma ** jnp.arange(self.n, dtype=jnp.float32))[:, None]
+        reward = jnp.sum(disc * cont_before * w["reward"], axis=0)
+        done = 1.0 - cont[-1]
+        first_done = jnp.argmax(d > 0.5, axis=0)         # 0 when none
+        horizon = jnp.where(jnp.any(d > 0.5, axis=0), first_done, self.n - 1)
+        next_obs = jax.vmap(lambda col, h: col[h], in_axes=(1, 0))(
+            w["next_obs"], horizon)
+        emitted = {"obs": w["obs"][0], "action": w["action"][0],
+                   "reward": reward, "next_obs": next_obs, "done": done}
+        return new, emitted, count >= self.n
+
+
 class ReplayState(NamedTuple):
     storage: Any          # pytree of arrays with leading dim = capacity
     sampler_state: Any    # state of the priority sampler
@@ -46,6 +135,7 @@ class ReplayState(NamedTuple):
     write_stamp: jax.Array   # int32[capacity] global add counter at last
     #                          write of each slot (-1 = never written)
     total_adds: jax.Array    # int32 transitions ever written
+    nstep: Any = None        # NStepState when n_step > 1, else None
 
 
 class ReplayBuffer:
@@ -56,18 +146,36 @@ class ReplayBuffer:
       sampler: object exposing init/update/sample/priorities (see core.amper).
       alpha: PER exponent; priorities stored as (|td| + eps)^alpha.
       beta: importance-sampling exponent for weight computation.
+      n_step: store n-step transitions (1 = the classic 1-step buffer).
+        With ``n_step > 1``, ``add_batch`` expects exactly ``num_envs``
+        rows per call (one lockstep vectorized env step) and routes them
+        through the in-state :class:`NStepAccumulator`.
+      gamma: discount used for the n-step return (ignored for n_step=1).
+      num_envs: env-stream width the accumulator is sized for.
     """
 
     def __init__(self, capacity: int, sampler, alpha: float = 0.6,
-                 beta: float = 0.4, eps: float = 1e-2):
+                 beta: float = 0.4, eps: float = 1e-2, n_step: int = 1,
+                 gamma: float = 0.99, num_envs: int = 1):
         self.capacity = capacity
         self.sampler = sampler
         self.alpha = alpha
         self.beta = beta
         self.eps = eps
+        self.n_step = n_step
+        self.num_envs = num_envs
+        self.accumulator = (NStepAccumulator(n_step, gamma)
+                            if n_step > 1 else None)
         # Mesh-native samplers advertise the NamedSharding of their
         # priority table; storage follows it on the capacity dim.
         self.storage_sharding = getattr(sampler, "sharding", None)
+
+    def nstep_init(self, example_transition: Any):
+        """Fresh accumulator state for an independent env stream (the
+        async runtime gives each actor its own), or None for n_step=1."""
+        if self.accumulator is None:
+            return None
+        return self.accumulator.init(example_transition, self.num_envs)
 
     def _constrain(self, storage: Any) -> Any:
         if self.storage_sharding is None:
@@ -90,6 +198,7 @@ class ReplayBuffer:
             write_stamp=self._constrain(
                 jnp.full((self.capacity,), -1, jnp.int32)),
             total_adds=jnp.int32(0),
+            nstep=self.nstep_init(example_transition),
         )
 
     def add(self, state: ReplayState, transition: Any) -> ReplayState:
@@ -97,15 +206,8 @@ class ReplayBuffer:
         return self.add_batch(
             state, jax.tree.map(lambda x: jnp.asarray(x)[None], transition))
 
-    def add_batch(self, state: ReplayState, transitions: Any) -> ReplayState:
-        """Store B transitions (leading dim B on every leaf) in one shot.
-
-        The write slots are the contiguous ring arc
-        ``(pos + arange(B)) % capacity`` — distinct as long as
-        B <= capacity, so one batched sampler priority write replaces B
-        sequential ones and every sampler's scatter semantics stay
-        well-defined across the wraparound.
-        """
+    def _write_arc(self, state: ReplayState, transitions: Any) -> ReplayState:
+        """Raw ring-arc write of B already-final rows (no accumulation)."""
         b = jax.tree.leaves(transitions)[0].shape[0]
         if b > self.capacity:
             raise ValueError(
@@ -128,20 +230,61 @@ class ReplayBuffer:
             max_priority=state.max_priority,
             write_stamp=self._constrain(state.write_stamp.at[idx].set(stamps)),
             total_adds=state.total_adds + b,
+            nstep=state.nstep,
         )
 
-    def add_block(self, state: ReplayState, block: Any) -> ReplayState:
+    def add_batch(self, state: ReplayState, transitions: Any) -> ReplayState:
+        """Store B transitions (leading dim B on every leaf) in one shot.
+
+        The write slots are the contiguous ring arc
+        ``(pos + arange(B)) % capacity`` — distinct as long as
+        B <= capacity, so one batched sampler priority write replaces B
+        sequential ones and every sampler's scatter semantics stay
+        well-defined across the wraparound.
+
+        With ``n_step > 1`` the rows are one lockstep vectorized env
+        step (B must equal ``num_envs``); they enter the in-state
+        accumulator and the *emitted* n-step rows are written instead —
+        nothing reaches the ring until the window has warmed up.
+        """
+        if self.accumulator is None:
+            return self._write_arc(state, transitions)
+        b = jax.tree.leaves(transitions)[0].shape[0]
+        if b != self.num_envs:
+            raise ValueError(
+                f"n_step={self.n_step} add_batch expects one vectorized "
+                f"env step of num_envs={self.num_envs} rows, got {b} "
+                f"(pre-aggregated rows go through add_block(..., "
+                f"aggregated=True))")
+        nstate, emitted, valid = self.accumulator.push(
+            state.nstep, transitions)
+        state = state._replace(nstep=nstate)
+        return jax.lax.cond(
+            valid, lambda s: self._write_arc(s, emitted), lambda s: s, state)
+
+    def add_block(self, state: ReplayState, block: Any,
+                  aggregated: bool = False) -> ReplayState:
         """Store a ``[T, B, ...]`` rollout block in chronological order.
 
         This is the runtime's block-enqueue entry point: an actor hands
         over a whole chunk of T vectorized steps at once, and the flatten
         preserves time-major order so the ring arc matches T sequential
         ``add_batch`` calls exactly.
+
+        ``aggregated=True`` marks the rows as already n-step (the async
+        actors run their own per-stream accumulator), bypassing the
+        buffer's accumulator; with ``n_step > 1`` and raw rows the block
+        is scanned through ``add_batch`` one timestep at a time instead
+        of the single flattened write.
         """
         t, b = jax.tree.leaves(block)[0].shape[:2]
+        if self.accumulator is not None and not aggregated:
+            state, _ = jax.lax.scan(
+                lambda s, tr: (self.add_batch(s, tr), None), state, block)
+            return state
         flat = jax.tree.map(
             lambda x: x.reshape((t * b,) + x.shape[2:]), block)
-        return self.add_batch(state, flat)
+        return self._write_arc(state, flat)
 
     def sample(self, state: ReplayState, key: jax.Array, batch: int,
                beta: float | jax.Array | None = None):

@@ -1,0 +1,89 @@
+"""Q-network heads for the DQN agent family (paper Sec. 2.4 test vehicle).
+
+The agent layer composes two orthogonal axes (see :mod:`repro.rl.dqn`):
+the *head* (this module) maps observations to Q-values, and the
+*target rule* (vanilla max vs Double-DQN argmax decoupling) turns those
+Q-values into TD targets.  Heads are pure init/apply pairs over plain
+pytrees, so they jit, vmap (``train_many`` runs whole training sweeps
+data-parallel over seeds) and checkpoint with zero glue:
+
+* ``"mlp"``     — the 3-layer MLP of the paper's setup (Sec. 4.1.2),
+  bit-identical to the pre-family network so existing learning pins
+  keep their trajectories.
+* ``"dueling"`` — Wang et al.'s dueling decomposition: a shared trunk
+  feeding separate state-value and advantage streams, recombined as
+  ``Q(s, a) = V(s) + A(s, a) - mean_a A(s, a)`` (the identifiable form).
+
+Both accept a single observation ``[obs_dim]`` or a batch
+``[B, obs_dim]`` and return Q-values with ``n_actions`` on the last
+axis — the contract the actor's argmax and the learner's
+``take_along_axis`` rely on.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+HEAD_KINDS = ("mlp", "dueling")
+
+
+def mlp_init(key, sizes):
+    """He-initialised dense stack (ReLU between layers, linear output)."""
+    params = []
+    for a, b in zip(sizes[:-1], sizes[1:]):
+        k1, key = jax.random.split(key)
+        params.append({
+            "w": jax.random.normal(k1, (a, b)) * (2.0 / a) ** 0.5,
+            "b": jnp.zeros(b),
+        })
+    return params
+
+
+def mlp_apply(params, x):
+    for i, layer in enumerate(params):
+        x = x @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+class QHead(NamedTuple):
+    """An init/apply pair mapping observations to Q-values."""
+
+    kind: str
+    init: Callable[[jax.Array], Any]     # key -> params pytree
+    apply: Callable[[Any, jax.Array], jax.Array]  # (params, obs) -> q
+
+
+def make_qhead(kind: str, obs_dim: int, hidden: int,
+               n_actions: int) -> QHead:
+    """Build a Q-head by kind (``"mlp"`` or ``"dueling"``)."""
+    if kind == "mlp":
+        def init(key):
+            return mlp_init(key, [obs_dim, hidden, hidden, n_actions])
+
+        return QHead(kind=kind, init=init, apply=mlp_apply)
+
+    if kind == "dueling":
+        def init(key):
+            k_trunk, k_v, k_a = jax.random.split(key, 3)
+            return {
+                "trunk": mlp_init(k_trunk, [obs_dim, hidden, hidden]),
+                "value": mlp_init(k_v, [hidden, 1]),
+                "adv": mlp_init(k_a, [hidden, n_actions]),
+            }
+
+        def apply(params, x):
+            h = x
+            for layer in params["trunk"]:
+                h = jax.nn.relu(h @ layer["w"] + layer["b"])
+            v = mlp_apply(params["value"], h)
+            a = mlp_apply(params["adv"], h)
+            return v + a - jnp.mean(a, axis=-1, keepdims=True)
+
+        return QHead(kind=kind, init=init, apply=apply)
+
+    raise ValueError(
+        f"unknown Q-head kind: {kind!r} (available: {list(HEAD_KINDS)})")

@@ -1,10 +1,25 @@
-"""DQN agent with pluggable experience replay (the paper's test vehicle).
+"""DQN agent *family* with pluggable experience replay (the paper's test
+vehicle, grown to the variants the PER literature reports on).
 
-Architecture follows the paper's setup (Sec. 2.4 / 4.1.2): 3-layer MLP
-action/target networks, epsilon-greedy exploration, hard target sync,
-replay memory with uniform / PER / AMPER-k / AMPER-fr sampling.  The
-ENTIRE loop — environment, replay, sampling, TD update — is one
-lax.scan, so a full CartPole run takes seconds on CPU.
+Architecture follows the paper's setup (Sec. 2.4 / 4.1.2) — epsilon-greedy
+exploration, hard target sync, replay memory with uniform / PER /
+AMPER-k / AMPER-fr sampling — but the agent layer is composable along
+three orthogonal axes, all selected from :class:`DQNConfig` with zero
+call-site changes:
+
+* **Q-head** (``repro.models.qhead``): the 3-layer MLP of the paper, or
+  the dueling value/advantage decomposition (Wang et al. 2016).
+* **Target rule**: vanilla ``max_a Q_target`` or Double-DQN's
+  argmax-decoupled ``Q_target(s', argmax_a Q_online(s', a))``
+  (van Hasselt et al. 2016) — the setup Schaul et al. report PER on.
+* **n-step returns** (``n_step=N``): the replay stack itself aggregates
+  the 1-step stream into truncated n-step transitions (the accumulator
+  lives in :class:`~repro.core.replay_buffer.ReplayState`, so it rides
+  through checkpoints), and the learner bootstraps with ``gamma**N``.
+
+``agent="dqn" | "double" | "dueling" | "double-dueling"`` composes the
+first two axes.  The ENTIRE loop — environment, replay, sampling, TD
+update — is one lax.scan, so a full CartPole run takes seconds on CPU.
 
 The actor side is batched: ``cfg.num_envs`` independent environments
 step in lockstep (``VectorEnv``), every iteration writes a B-transition
@@ -32,16 +47,27 @@ import jax.numpy as jnp
 from repro.core.per import beta_schedule
 from repro.core.replay_buffer import ReplayBuffer
 from repro.core.samplers import make_sampler
+from repro.models.qhead import make_qhead, mlp_apply, mlp_init  # noqa: F401
 from repro.rl import envs as envs_mod
 from repro.train import checkpoint as ckpt_mod
 
 RETURN_RING = 64  # completed-episode returns kept for the train metric
+
+# agent name -> (Q-head kind, use Double-DQN targets)
+AGENTS = {
+    "dqn": ("mlp", False),
+    "double": ("mlp", True),
+    "dueling": ("dueling", False),
+    "double-dueling": ("dueling", True),
+}
 
 
 @dataclasses.dataclass(frozen=True)
 class DQNConfig:
     env: str = "cartpole"
     sampler: str = "per-sumtree"   # any repro.core.samplers registry name
+    agent: str = "dqn"             # dqn | double | dueling | double-dueling
+    n_step: int = 1                # n-step return horizon (1 = classic)
     num_envs: int = 1
     replay_size: int = 2000
     batch: int = 64
@@ -67,25 +93,6 @@ class DQNConfig:
     amper_lam_fr: float = 2.0
     amper_csp_ratio: float = 0.15
     v_max: float = 8.0
-
-
-def mlp_init(key, sizes):
-    params = []
-    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
-        k1, key = jax.random.split(key)
-        params.append({
-            "w": jax.random.normal(k1, (a, b)) * (2.0 / a) ** 0.5,
-            "b": jnp.zeros(b),
-        })
-    return params
-
-
-def mlp_apply(params, x):
-    for i, layer in enumerate(params):
-        x = x @ layer["w"] + layer["b"]
-        if i < len(params) - 1:
-            x = jax.nn.relu(x)
-    return x
 
 
 class AgentState(NamedTuple):
@@ -127,11 +134,24 @@ class DQN(NamedTuple):
     venv: Any                # VectorEnv over cfg.num_envs copies
     replay: Any              # the ReplayBuffer (sampler attached)
     beta_at: Callable        # (step) -> IS exponent under cfg's schedule
+    q_apply: Callable        # (params, obs) -> Q-values (the head's apply)
+    example_transition: Any  # zero transition pytree (schema of the ring)
 
 
 def make_dqn(cfg: DQNConfig) -> DQN:
     env = envs_mod.make_env(cfg.env)
     venv = envs_mod.VectorEnv(env, cfg.num_envs)
+    try:
+        head_kind, double = AGENTS[cfg.agent]
+    except KeyError:
+        raise ValueError(f"unknown agent: {cfg.agent!r} "
+                         f"(available: {sorted(AGENTS)})") from None
+    if cfg.n_step < 1:
+        raise ValueError(f"n_step must be >= 1, got {cfg.n_step}")
+    qhead = make_qhead(head_kind, env.obs_dim, cfg.hidden, env.n_actions)
+    q_apply = qhead.apply
+    # n-step targets bootstrap the un-terminated window with gamma^n.
+    gamma_n = cfg.gamma ** cfg.n_step
     # The completed-return ring must fit one iteration's worst case of
     # num_envs simultaneous finishes, else slots collide within a scatter.
     ring = max(RETURN_RING, cfg.num_envs)
@@ -142,15 +162,17 @@ def make_dqn(cfg: DQNConfig) -> DQN:
         min_csp=cfg.batch, knn_mode="bisect")
     is_per = cfg.sampler.startswith("per")
     rb = ReplayBuffer(cfg.replay_size, sampler, alpha=cfg.alpha,
-                      beta=cfg.beta)
+                      beta=cfg.beta, n_step=cfg.n_step, gamma=cfg.gamma,
+                      num_envs=cfg.num_envs)
+    example_transition = {
+        "obs": jnp.zeros(env.obs_dim), "action": jnp.int32(0),
+        "reward": jnp.float32(0), "next_obs": jnp.zeros(env.obs_dim),
+        "done": jnp.float32(0)}
 
     def init(key) -> AgentState:
         k1, k2 = jax.random.split(key)
-        params = mlp_init(k1, [env.obs_dim, cfg.hidden, cfg.hidden,
-                               env.n_actions])
-        tr = {"obs": jnp.zeros(env.obs_dim), "action": jnp.int32(0),
-              "reward": jnp.float32(0), "next_obs": jnp.zeros(env.obs_dim),
-              "done": jnp.float32(0)}
+        params = qhead.init(k1)
+        tr = example_transition
         env_state = venv.reset(k2)
         return AgentState(
             params=params, target_params=params,
@@ -162,10 +184,18 @@ def make_dqn(cfg: DQNConfig) -> DQN:
             last_returns=jnp.zeros(ring), n_episodes=jnp.int32(0))
 
     def td_loss(params, target_params, batch, weights):
-        q = mlp_apply(params, batch["obs"])
+        q = q_apply(params, batch["obs"])
         qa = jnp.take_along_axis(q, batch["action"][:, None], 1)[:, 0]
-        qn = mlp_apply(target_params, batch["next_obs"])
-        target = batch["reward"] + cfg.gamma * (1 - batch["done"]) * qn.max(-1)
+        qn = q_apply(target_params, batch["next_obs"])
+        if double:
+            # Double DQN: the online net picks the action, the target net
+            # evaluates it — decoupling selection from overestimation.
+            a_star = jnp.argmax(q_apply(params, batch["next_obs"]), axis=-1)
+            boot = jnp.take_along_axis(qn, a_star[:, None], 1)[:, 0]
+            boot = jax.lax.stop_gradient(boot)
+        else:
+            boot = qn.max(-1)
+        target = batch["reward"] + gamma_n * (1 - batch["done"]) * boot
         td = qa - jax.lax.stop_gradient(target)
         return jnp.mean(weights * td * td), td
 
@@ -200,7 +230,7 @@ def make_dqn(cfg: DQNConfig) -> DQN:
         eps = jnp.clip(
             cfg.eps_start + (cfg.eps_end - cfg.eps_start)
             * step / cfg.eps_decay_steps, cfg.eps_end, cfg.eps_start)
-        q = mlp_apply(params, obs)                       # [B, n_actions]
+        q = q_apply(params, obs)                         # [B, n_actions]
         greedy = jnp.argmax(q, axis=-1)
         explore = jax.random.uniform(k_coin, (cfg.num_envs,)) < eps
         randa = jax.random.randint(k_rand, (cfg.num_envs,), 0, env.n_actions)
@@ -265,7 +295,10 @@ def make_dqn(cfg: DQNConfig) -> DQN:
                          last_returns=last_returns, n_episodes=n_episodes)
         metrics = {"return_mean": jnp.where(
             n_episodes > 0,
-            last_returns.sum() / jnp.minimum(n_episodes, ring), 0.0)}
+            last_returns.sum() / jnp.minimum(n_episodes, ring), 0.0),
+            # The IS exponent this step's draw actually used — surfaces
+            # the annealed schedule instead of the frozen constructor β.
+            "beta": jnp.float32(beta_at(state.step))}
         return new, metrics
 
     def _train(key, n_steps: int):
@@ -335,7 +368,8 @@ def make_dqn(cfg: DQNConfig) -> DQN:
             if manager.preempted and t < n_steps:
                 break
         if not parts:  # resumed a run that had already completed
-            return state, {"return_mean": jnp.zeros((0,))}, t
+            return state, {"return_mean": jnp.zeros((0,)),
+                           "beta": jnp.zeros((0,))}, t
         metrics = jax.tree.map(lambda *xs: jnp.concatenate(xs), *parts)
         return state, metrics, t
 
@@ -355,7 +389,7 @@ def make_dqn(cfg: DQNConfig) -> DQN:
             def body(carry):
                 env_state, obs, ret, done, key = carry
                 key, k = jax.random.split(key)
-                action = jnp.argmax(mlp_apply(params, obs)).astype(jnp.int32)
+                action = jnp.argmax(q_apply(params, obs)).astype(jnp.int32)
                 env_state, obs2, r, d = env.step(env_state, action, k)
                 return (env_state, env.obs(env_state), ret + r * (1 - done),
                         jnp.maximum(done, d.astype(jnp.float32)), key)
@@ -379,4 +413,5 @@ def make_dqn(cfg: DQNConfig) -> DQN:
                train_ckpt=train_ckpt, train_many=train_many,
                evaluate=evaluate, evaluate_many=evaluate_many, act=act,
                learn=learn, cfg=cfg, env=env, venv=venv, replay=rb,
-               beta_at=beta_at)
+               beta_at=beta_at, q_apply=q_apply,
+               example_transition=example_transition)

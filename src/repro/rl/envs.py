@@ -154,6 +154,53 @@ class Acrobot:
         return next_state, self.obs(nxt), reward, done
 
 
+@register_env("mountaincar")
+class MountainCar:
+    """MountainCar-v0: drive up the right hill; -1 per step; 200-step cap.
+
+    Gym's deterministic point-mass-on-a-curve dynamics (the only
+    randomness is the reset position), Euler-integrated with the same
+    constants, bounds, and ``position >= 0.5`` goal test.  The sparse
+    -1-per-step reward makes it the hard-exploration member of the env
+    grid: n-step returns propagate the goal signal ``n`` times faster,
+    which is exactly the axis the agent-family benchmarks sweep.
+    """
+
+    obs_dim = 2
+    n_actions = 3
+    max_steps = 200
+
+    MIN_POS, MAX_POS = -1.2, 0.6
+    MAX_SPEED = 0.07
+    GOAL_POS, GOAL_VEL = 0.5, 0.0
+    FORCE, GRAVITY = 0.001, 0.0025
+
+    def reset(self, key: jax.Array) -> EnvState:
+        pos = jax.random.uniform(key, (), minval=-0.6, maxval=-0.4)
+        return EnvState(x=jnp.stack([pos, jnp.float32(0.0)]),
+                        t=jnp.int32(0))
+
+    def obs(self, state: EnvState) -> jax.Array:
+        return state.x
+
+    def step(self, state: EnvState, action: jax.Array, key: jax.Array):
+        pos, vel = state.x
+        vel = vel + (jnp.float32(action) - 1.0) * self.FORCE \
+            + jnp.cos(3.0 * pos) * (-self.GRAVITY)
+        vel = jnp.clip(vel, -self.MAX_SPEED, self.MAX_SPEED)
+        pos = jnp.clip(pos + vel, self.MIN_POS, self.MAX_POS)
+        vel = jnp.where((pos <= self.MIN_POS) & (vel < 0), 0.0, vel)
+        t = state.t + 1
+        solved = (pos >= self.GOAL_POS) & (vel >= self.GOAL_VEL)
+        done = solved | (t >= self.max_steps)
+        reward = jnp.float32(-1.0)
+        nxt = EnvState(x=jnp.stack([pos, vel]), t=t)
+        fresh = self.reset(key)
+        next_state = jax.tree.map(
+            lambda a, b: jnp.where(done, a, b), fresh, nxt)
+        return next_state, nxt.x, reward, done
+
+
 class VectorEnv:
     """B independent copies of a scalar env, vmapped (the actor front-end).
 

@@ -29,9 +29,18 @@ from repro.runtime import prng
 
 
 class TransitionBlock(NamedTuple):
-    """One rollout chunk handed from an actor to the replay service."""
+    """One rollout chunk handed from an actor to the replay service.
 
-    transitions: Any            # pytree, leaves [chunk_len, num_envs, ...]
+    With n-step replay the rows are already aggregated by the actor's
+    own :class:`~repro.core.replay_buffer.NStepAccumulator` (each actor
+    is an independent env stream, so the buffer's shared accumulator
+    cannot serve them); the leading dim is then the number of *emitted*
+    n-step rows — ``chunk_len`` once warm, fewer for the chunk that
+    spans the warm-up, and ``transitions`` is None when the whole chunk
+    fell inside it.  ``frames`` always counts raw env frames.
+    """
+
+    transitions: Any            # pytree, leaves [emitted, num_envs, ...]
     frames: int                 # chunk_len * num_envs
     actor_id: int
     chunk_id: int
@@ -108,27 +117,38 @@ class PauseGate:
 
 def make_rollout(dqn, chunk_len: int) -> Callable:
     """Build the jittable chunk function
-    ``(params, env_state, obs, step0, ep_ret, key) ->
-    (env_state, obs, ep_ret, transitions, finished)``
-    where ``transitions`` leaves lead with ``[chunk_len, num_envs]`` and
-    ``finished`` is ``float32[chunk_len, num_envs]`` holding completed
-    episode returns (NaN where no episode ended)."""
+    ``(params, env_state, obs, step0, ep_ret, nstep, key) ->
+    (env_state, obs, ep_ret, nstep, transitions, valid, finished)``
+    where ``transitions`` leaves lead with ``[chunk_len, num_envs]``,
+    ``valid`` is ``bool[chunk_len]`` (always True for 1-step; for n-step
+    it gates rows emitted before the accumulator warmed up — envs run in
+    lockstep, so validity is per-timestep, not per-env) and ``finished``
+    is ``float32[chunk_len, num_envs]`` holding completed episode
+    returns (NaN where no episode ended).  ``nstep`` threads the actor's
+    own per-stream accumulator state (None when ``cfg.n_step == 1``)."""
     act = dqn.act
+    acc = dqn.replay.accumulator   # None for n_step == 1
 
-    def rollout(params, env_state, obs, step0, ep_ret, key):
+    def rollout(params, env_state, obs, step0, ep_ret, nstep, key):
         def body(carry, i):
-            env_state, obs, ep_ret = carry
+            env_state, obs, ep_ret, ns = carry
             env_state, obs, tr = act(
                 params, env_state, obs, step0 + i, jax.random.fold_in(key, i))
             ret = ep_ret + tr["reward"]
             done = tr["done"] > 0.5
             finished = jnp.where(done, ret, jnp.nan)
-            return (env_state, obs, jnp.where(done, 0.0, ret)), (tr, finished)
+            if acc is not None:
+                ns, out, valid = acc.push(ns, tr)
+            else:
+                out, valid = tr, jnp.bool_(True)
+            return ((env_state, obs, jnp.where(done, 0.0, ret), ns),
+                    (out, valid, finished))
 
-        (env_state, obs, ep_ret), (transitions, finished) = jax.lax.scan(
-            body, (env_state, obs, ep_ret),
+        carry, (transitions, valid, finished) = jax.lax.scan(
+            body, (env_state, obs, ep_ret, nstep),
             jnp.arange(chunk_len, dtype=jnp.int32))
-        return env_state, obs, ep_ret, transitions, finished
+        env_state, obs, ep_ret, nstep = carry
+        return env_state, obs, ep_ret, nstep, transitions, valid, finished
 
     return rollout
 
@@ -171,9 +191,10 @@ class Actor(threading.Thread):
             self.error = e
             self._stop_evt.set()
 
-    def _publish_run_state(self, env_state, obs, ep_ret, step, chunk):
+    def _publish_run_state(self, env_state, obs, ep_ret, nstep, step, chunk):
         self.run_state = {"env_state": env_state, "obs": obs,
-                          "ep_ret": ep_ret, "step": step, "chunk": chunk}
+                          "ep_ret": ep_ret, "nstep": nstep,
+                          "step": step, "chunk": chunk}
 
     def _loop(self) -> None:
         dqn, chunk_len = self._dqn, self._chunk_len
@@ -182,16 +203,21 @@ class Actor(threading.Thread):
             env_state = dqn.venv.reset(k_reset)
             obs = dqn.venv.obs(env_state)
             ep_ret = jnp.zeros(dqn.cfg.num_envs)
+            # This actor's own n-step window (None for n_step == 1): an
+            # independent env stream must not share the buffer's.
+            nstep = dqn.replay.nstep_init(dqn.example_transition)
             step, chunk = 0, 0
         else:
-            # Exact continuation: env state, episode accounting, and the
-            # PRNG stream position (chunk counter) come from the snapshot;
-            # chunk_key(k_roll, chunk) resumes the same key stream an
-            # uninterrupted run would have consumed next.
+            # Exact continuation: env state, episode accounting, the
+            # n-step window, and the PRNG stream position (chunk counter)
+            # come from the snapshot; chunk_key(k_roll, chunk) resumes
+            # the same key stream an uninterrupted run would have
+            # consumed next.
             rs = self._resume_state
             env_state, obs, ep_ret = rs["env_state"], rs["obs"], rs["ep_ret"]
+            nstep = rs.get("nstep")
             step, chunk = int(rs["step"]), int(rs["chunk"])
-        self._publish_run_state(env_state, obs, ep_ret, step, chunk)
+        self._publish_run_state(env_state, obs, ep_ret, nstep, step, chunk)
         while not self._stop_evt.is_set():
             if self._gate is not None:
                 self._gate.wait_if_paused(self._stop_evt)
@@ -205,10 +231,21 @@ class Actor(threading.Thread):
                 continue  # park at the loop-top gate before rolling out
             if self._stop_evt.is_set():
                 return
-            env_state, obs, ep_ret, transitions, finished = self._rollout(
+            (env_state, obs, ep_ret, nstep, transitions, valid,
+             finished) = self._rollout(
                 self._params_fn(), env_state, obs, jnp.int32(step), ep_ret,
-                prng.chunk_key(k_roll, chunk))
+                nstep, prng.chunk_key(k_roll, chunk))
             fin = np.asarray(finished).ravel()
+            # n-step warm-up: invalid rows form a prefix (the window only
+            # fills once), so drop them host-side — the replay thread
+            # writes only real n-step rows.  One extra jit trace for the
+            # single shorter chunk that spans the warm-up.
+            n_valid = int(np.asarray(valid).sum())
+            if n_valid == 0:
+                transitions = None
+            elif n_valid < chunk_len:
+                transitions = jax.tree.map(
+                    lambda x: x[chunk_len - n_valid:], transitions)
             block = TransitionBlock(
                 transitions=transitions,
                 frames=chunk_len * dqn.cfg.num_envs,
@@ -219,7 +256,8 @@ class Actor(threading.Thread):
             step += chunk_len
             chunk += 1
             self.chunks_done = chunk
-            self._publish_run_state(env_state, obs, ep_ret, step, chunk)
+            self._publish_run_state(env_state, obs, ep_ret, nstep, step,
+                                    chunk)
 
 
 class ActorPool:

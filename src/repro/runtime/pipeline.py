@@ -103,6 +103,10 @@ class PrefetchPipeline(threading.Thread):
         self._start_seq = start_seq
         self.draws = start_draw
         self.slabs_done = 0
+        # IS exponent the latest slab draw used (None until the first
+        # draw, or when no beta_fn is wired) — the annealed value the
+        # service surfaces in its metrics dict.
+        self.last_beta: float | None = None
         self.error: BaseException | None = None
 
     def run(self) -> None:
@@ -141,6 +145,8 @@ class PrefetchPipeline(threading.Thread):
                 # replay.sample fall back to its constructor constant.
                 beta = (jnp.float32(self._beta_fn(version))
                         if self._beta_fn is not None else None)
+                if beta is not None:
+                    self.last_beta = float(beta)
                 idx, batch, weights, stamp = self._sample(
                     state, prng.sample_key(self._base_key, draw), beta)
                 draw += 1

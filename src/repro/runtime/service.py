@@ -43,6 +43,7 @@ staleness (how many learner steps old is a priority when it lands).
 from __future__ import annotations
 
 import collections
+import functools
 import queue
 import threading
 import time
@@ -127,7 +128,10 @@ class ReplayService:
         donate = () if jax.default_backend() == "cpu" else (5, 6)
         self._learn = jax.jit(make_slab_learner(self.dqn),
                               donate_argnums=donate)
-        self._add_block = jax.jit(rb.add_block)
+        # Actors pre-aggregate n-step rows in their own accumulators, so
+        # the canonical buffer must not run its accumulator again.
+        self._add_block = jax.jit(
+            functools.partial(rb.add_block, aggregated=True))
 
         def apply_feedback(state, idx, td, stamp):
             # Flatten [S, batch] row-major: masked_update resolves rows
@@ -176,7 +180,10 @@ class ReplayService:
         a = jax.eval_shape(self.dqn.init, jax.random.key(0))
         actor_t = {"env_state": a.env_state, "obs": a.obs,
                    "ep_ret": jax.ShapeDtypeStruct((self.cfg.num_envs,),
-                                                  jnp.float32)}
+                                                  jnp.float32),
+                   # the actor's own n-step window (None when n_step=1);
+                   # same abstract shape as the buffer's in-state one
+                   "nstep": a.buffer.nstep}
         return {"key_data": self._key_data_struct(),
                 "params": a.params, "target_params": a.target_params,
                 "opt_m": a.opt_m, "opt_v": a.opt_v, "buffer": a.buffer,
@@ -272,6 +279,9 @@ class ReplayService:
                                / max(wall_end - t0, 1e-9)),
             "return_mean": float(curve[-1]) if len(curve) else 0.0,
             "return_curve": curve,
+            # β the last executed step's draw used — the annealed value,
+            # not the frozen constructor default.
+            "beta": float(self.dqn.beta_at(max(t_end - 1, 0))),
             "staleness": {"count": 0, "mean": 0.0, "max": 0},
             "resumed_from": start if start else None,
             "preempted_at": preempted_at,
@@ -448,6 +458,12 @@ class ReplayService:
             "return_mean": (float(returns[-64:].mean())
                             if returns.size else 0.0),
             "recent_returns": returns[-64:],
+            # β of the prefetcher's latest slab draw (annealed), falling
+            # back to the schedule at the last executed learner step
+            # (same convention as sync mode) if no draw happened.
+            "beta": (prefetch.last_beta if prefetch.last_beta is not None
+                     else float(self.dqn.beta_at(
+                         max(learner.steps_done - 1, 0)))),
             "feedback_seqs": rec["feedback_seqs"],
             "staleness": {
                 "count": rec["stale_n"],
@@ -524,7 +540,8 @@ class ReplayService:
                 "params": params, "target_params": target_params,
                 "opt_m": opt_m, "opt_v": opt_v, "buffer": self._bstate,
                 "actors": [{"env_state": rs["env_state"], "obs": rs["obs"],
-                            "ep_ret": rs["ep_ret"]} for rs in run_states]}
+                            "ep_ret": rs["ep_ret"], "nstep": rs["nstep"]}
+                           for rs in run_states]}
         meta = {"mode": "async", "learner_steps": int(steps),
                 "num_actors": self.num_actors,
                 "prefetch_draw": int(prefetch.draws),
@@ -555,8 +572,10 @@ class ReplayService:
                 # counters, so "counters say drained" implies the saved
                 # self._bstate already contains the counted item.
                 if tag == "block":
-                    bstate = self._add_block(bstate, item.transitions)
-                    self._bstate = bstate
+                    if item.transitions is not None:  # None: all rows fell
+                        bstate = self._add_block(      # in n-step warm-up
+                            bstate, item.transitions)
+                        self._bstate = bstate
                     rec["frames"] += item.frames
                     rec["blocks"] += 1
                     rec["returns"].extend(item.completed_returns.tolist())

@@ -24,8 +24,12 @@ this module adds what the replay subsystem needs on top:
 * **Whole-ReplayState save/restore** (:func:`save_replay` /
   :func:`restore_replay`) including the hidden exact-resume state the
   async runtime relies on: per-slot write stamps, the global add counter,
-  ``max_priority``, and the ring position all live in ``ReplayState`` and
-  round-trip bitwise.
+  ``max_priority``, the ring position, and (for ``n_step > 1`` buffers)
+  the :class:`~repro.core.replay_buffer.NStepAccumulator` window — ring
+  of in-flight transitions, saturation count, and cursor — all live in
+  ``ReplayState`` and round-trip bitwise, so a resumed n-step run keeps
+  aggregating mid-window exactly where the killed one stopped (pinned in
+  ``tests/test_replay_checkpoint.py`` / ``tests/test_resume.py``).
 """
 from __future__ import annotations
 

@@ -1,0 +1,110 @@
+"""High-churn stress tests for the async replay runtime.
+
+A deliberately tiny buffer, many actor threads, and short rollout
+chunks force rapid slot recycling: most sampled rows are overwritten
+between the prefetch draw and the deferred priority apply.  Under that
+pressure the runtime must keep the stamped ``update_priorities``
+contract — every learner batch's feedback applied exactly once, in
+learner-step order, and never onto a recycled slot — and the service
+must stay live (no wedge, no dropped slabs).
+
+The recycled-slot half of the contract is pinned deterministically at
+the buffer level (the race test can't distinguish a stale write from a
+legitimate one by value alone), the liveness/ordering half under real
+thread contention.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.replay_buffer import ReplayBuffer
+from repro.core.samplers import make_sampler
+from repro.rl.dqn import DQNConfig
+from repro.runtime import ReplayService
+
+
+# --- deterministic recycled-slot contract under churn -------------------------
+
+
+@pytest.mark.parametrize("kind", ["per-cumsum", "per-sumtree", "amper-fr"])
+def test_stamped_updates_never_land_on_recycled_slots_under_churn(kind):
+    """Drive the buffer through many sample -> recycle -> late-feedback
+    cycles with full ring wraparound; after each apply, every slot's
+    priority must equal the max-priority write if it was recycled since
+    the sample, the fed-back value otherwise."""
+    cap = 16
+    rb = ReplayBuffer(cap, make_sampler(kind, cap, v_max=64.0,
+                                        csp_capacity=cap))
+    st = rb.init({"x": jnp.float32(0)})
+    key = jax.random.key(0)
+    rng = np.random.default_rng(1)
+    st = rb.add_batch(st, {"x": jnp.zeros(cap)})
+    for round_ in range(20):
+        idx, _, _ = rb.sample(st, jax.random.fold_in(key, round_), 8)
+        stamp = rb.stamps(st, idx)
+        before = np.asarray(st.write_stamp).copy()
+        # recycle a random arc (0..cap rows) before the feedback lands
+        churn = int(rng.integers(0, cap + 1))
+        if churn:
+            st = rb.add_batch(st, {"x": jnp.full(churn, float(round_))})
+        mp_at_add = float(st.max_priority)  # what recycled slots received
+        td = jnp.linspace(1.0, 9.0, 8) + round_
+        st = rb.update_priorities(st, idx, td, stamp=stamp)
+        prios = np.asarray(rb.sampler.priorities(st.sampler_state))
+        after = np.asarray(st.write_stamp)
+        idx_np, td_np = np.asarray(idx), np.asarray(td)
+        expect = {}
+        for j, slot in enumerate(idx_np):
+            if after[slot] == before[slot]:  # survived -> last valid write
+                expect[slot] = (abs(td_np[j]) + rb.eps) ** rb.alpha
+        for slot, want in expect.items():
+            np.testing.assert_allclose(prios[slot], want, rtol=1e-4,
+                                       err_msg=f"round {round_} slot {slot}")
+        recycled = set(idx_np[after[idx_np] != before[idx_np]])
+        for slot in recycled - set(expect):
+            # recycled before the feedback: must hold the newcomer's
+            # max-priority entry (as of the add), not the stale TD write
+            np.testing.assert_allclose(
+                prios[slot], mp_at_add, rtol=1e-4,
+                err_msg=f"round {round_} stale write on recycled {slot}")
+
+
+# --- threaded race: tiny buffer, many actors, rapid recycling -----------------
+
+
+def _stress_service(n_step: int, sampler: str) -> ReplayService:
+    cfg = DQNConfig(sampler=sampler, n_step=n_step, num_envs=2,
+                    replay_size=32, batch=16, learn_start=4,
+                    eps_decay_steps=100, target_sync=10, v_max=8.0)
+    return ReplayService(cfg, num_actors=4, chunk_len=2, slab=2,
+                         queue_size=2, feedback_log=True)
+
+
+@pytest.mark.parametrize("n_step,sampler",
+                         [(1, "per-sumtree"), (3, "amper-fr")])
+def test_async_high_churn_exactly_once_in_order(n_step, sampler):
+    """4 actors race into a 32-slot ring (every ~4 blocks recycles the
+    whole buffer, so nearly every deferred update targets a dead slot):
+    the run must complete, apply every slab's feedback exactly once in
+    order, and keep the buffer invariants intact."""
+    n = 40
+    svc = _stress_service(n_step, sampler)
+    res = svc.run(jax.random.key(5), n)
+    m = res.metrics
+    assert m["learner_steps"] == n
+    assert m["feedback_seqs"] == list(range(n)), m["feedback_seqs"]
+    assert m["staleness"]["count"] == n
+    assert 0 <= m["staleness"]["mean"] <= m["staleness"]["max"]
+    buf = res.buffer
+    assert int(buf.size) == 32                       # fully churned
+    assert int(buf.total_adds) > 2 * 32              # many recycles
+    stamps = np.asarray(buf.write_stamp)
+    assert stamps.min() >= 0
+    assert stamps.max() == int(buf.total_adds) - 1   # ring write ordering
+    assert len(np.unique(stamps)) == 32              # stamps stay distinct
+    prios = np.asarray(svc.dqn.replay.sampler.priorities(buf.sampler_state))
+    assert np.isfinite(prios).all() and (prios >= 0).all()
+    assert float(buf.max_priority) >= 1.0
+    for leaf in jax.tree.leaves(res.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))

@@ -67,6 +67,68 @@ def test_wrong_sampler_restore_raises(tmp_path):
         rck.restore_replay(str(tmp_path), 1, rb2, EX)
 
 
+# --- n-step accumulator state ------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["per-cumsum", "amper-fr"])
+def test_nstep_replay_state_roundtrips_bitwise(kind, tmp_path):
+    """The in-state NStepAccumulator (ring window, count, cursor) must
+    round-trip bitwise — a resumed n-step run has to keep aggregating
+    mid-window exactly where the killed one stopped."""
+    n_envs = 4
+    rb = ReplayBuffer(CAP, make_sampler(kind, CAP, v_max=8.0, min_csp=64),
+                      n_step=3, gamma=0.97, num_envs=n_envs)
+    ex = {"obs": jnp.zeros(4), "action": jnp.int32(0),
+          "reward": jnp.float32(0), "next_obs": jnp.zeros(4),
+          "done": jnp.float32(0)}
+    st = rb.init(ex)
+    k = jax.random.key(0)
+    # 7 pushes: window warmed up AND mid-cycle (7 % 3 != 0), so the
+    # cursor, saturated count, and ring contents are all non-trivial
+    for i in range(7):
+        st = rb.add_batch(st, {
+            "obs": jax.random.normal(jax.random.fold_in(k, i), (n_envs, 4)),
+            "action": jnp.full(n_envs, i % 2, jnp.int32),
+            "reward": jnp.arange(n_envs, dtype=jnp.float32) + i,
+            "next_obs": jax.random.normal(jax.random.fold_in(k, 50 + i),
+                                          (n_envs, 4)),
+            "done": jnp.where(jnp.arange(n_envs) == i % n_envs, 1.0, 0.0)})
+    assert int(st.nstep.count) == 3 and int(st.nstep.pos) == 7 % 3
+    rck.save_replay(str(tmp_path), 4, st, meta={"sampler": kind})
+    out = rck.restore_replay(str(tmp_path), 4, rb, ex)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(out.nstep.count) == int(st.nstep.count)
+    assert int(out.nstep.pos) == int(st.nstep.pos)
+    # the restored accumulator keeps emitting the same stream
+    nxt = {"obs": jnp.ones((n_envs, 4)), "action": jnp.zeros(n_envs, jnp.int32),
+           "reward": jnp.ones(n_envs), "next_obs": jnp.ones((n_envs, 4)),
+           "done": jnp.zeros(n_envs)}
+    a_after = rb.add_batch(st, nxt)
+    b_after = rb.add_batch(out, nxt)
+    for a, b in zip(jax.tree.leaves(a_after), jax.tree.leaves(b_after)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_nstep_restore_into_wrong_horizon_raises(tmp_path):
+    """A checkpoint written with n_step=3 must not silently load into an
+    n_step=1 buffer (the manifest's leaf names differ)."""
+    rb3 = ReplayBuffer(CAP, make_sampler("per-cumsum", CAP), n_step=3,
+                       num_envs=2)
+    ex = {"obs": jnp.zeros(4), "action": jnp.int32(0),
+          "reward": jnp.float32(0), "next_obs": jnp.zeros(4),
+          "done": jnp.float32(0)}
+    st = rb3.init(ex)
+    for i in range(4):
+        st = rb3.add_batch(st, jax.tree.map(
+            lambda x: jnp.ones((2,) + jnp.shape(x), jnp.asarray(x).dtype),
+            ex))
+    rck.save_replay(str(tmp_path), 1, st)
+    rb1 = ReplayBuffer(CAP, make_sampler("per-cumsum", CAP))
+    with pytest.raises(ValueError):
+        rck.restore_replay(str(tmp_path), 1, rb1, ex)
+
+
 # --- elastic sharded restore -------------------------------------------------
 
 

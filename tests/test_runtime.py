@@ -17,10 +17,12 @@ from repro.runtime import ReplayService, prng
 # --- environment registry ----------------------------------------------------
 
 def test_env_registry_builds_by_name():
-    assert {"cartpole", "acrobot"} <= set(envs_mod.available_envs())
+    assert {"cartpole", "acrobot",
+            "mountaincar"} <= set(envs_mod.available_envs())
     env = envs_mod.make_env("cartpole")
     assert env.obs_dim == 4 and env.n_actions == 2
     assert envs_mod.make_env("acrobot").obs_dim == 6
+    assert envs_mod.make_env("mountaincar").obs_dim == 2
 
 
 def test_env_registry_unknown_raises():
@@ -142,6 +144,102 @@ def test_masked_update_duplicates_last_occurrence_wins(kind):
     np.testing.assert_allclose(prios2[3], 10.0, rtol=1e-6)
 
 
+# --- n-step accumulator ------------------------------------------------------
+
+def _nstep_reference(trs, n, gamma):
+    """Hand-rolled n-step aggregation over a [T] list of per-env dicts:
+    for each window start t (t + n <= T), the discounted return truncated
+    at the first done, the bootstrap obs, and the any-done flag."""
+    out = []
+    for t in range(len(trs) - n + 1):
+        w = trs[t:t + n]
+        reward, cont = 0.0, 1.0
+        h = n - 1
+        for k in range(n):
+            reward += (gamma ** k) * cont * w[k]["reward"]
+            if w[k]["done"] > 0.5:
+                h = k
+                cont = 0.0
+                break
+        done = 1.0 if cont == 0.0 else 0.0
+        out.append({"obs": w[0]["obs"], "action": w[0]["action"],
+                    "reward": reward, "next_obs": w[h]["next_obs"],
+                    "done": done})
+    return out
+
+
+def test_nstep_accumulator_matches_reference():
+    from repro.core.replay_buffer import NStepAccumulator
+
+    n, gamma, T, E = 3, 0.9, 12, 2
+    rng = np.random.default_rng(0)
+    acc = NStepAccumulator(n, gamma)
+    ex = {"obs": jnp.zeros(2), "action": jnp.int32(0),
+          "reward": jnp.float32(0), "next_obs": jnp.zeros(2),
+          "done": jnp.float32(0)}
+    st = acc.init(ex, E)
+    stream = []          # per timestep: [E] transition batch
+    for t in range(T):
+        stream.append({
+            "obs": rng.normal(size=(E, 2)).astype(np.float32),
+            "action": rng.integers(0, 2, E).astype(np.int32),
+            "reward": rng.normal(size=E).astype(np.float32),
+            "next_obs": rng.normal(size=(E, 2)).astype(np.float32),
+            "done": (rng.random(E) < 0.3).astype(np.float32)})
+    emitted = []
+    for t in range(T):
+        st, out, valid = acc.push(st, jax.tree.map(jnp.asarray, stream[t]))
+        assert bool(valid) == (t >= n - 1)
+        if valid:
+            emitted.append(jax.tree.map(np.asarray, out))
+    for e in range(E):
+        per_env = [{k: v[e] for k, v in tr.items()} for tr in stream]
+        ref = _nstep_reference(per_env, n, gamma)
+        assert len(ref) == len(emitted)
+        for i, r in enumerate(ref):
+            for k in ("obs", "action", "reward", "next_obs", "done"):
+                np.testing.assert_allclose(
+                    np.asarray(emitted[i][k])[e], r[k], rtol=1e-5,
+                    atol=1e-6, err_msg=f"env {e} window {i} field {k}")
+
+
+def test_nstep_add_block_matches_sequential_add_batch():
+    """Raw-block ingestion must scan the accumulator exactly like T
+    sequential vectorized add_batch calls (and skip warm-up rows)."""
+    rb = ReplayBuffer(64, make_sampler("per-cumsum", 64), n_step=3,
+                      gamma=0.95, num_envs=4)
+    ex = {"obs": jnp.zeros(3), "reward": jnp.float32(0),
+          "next_obs": jnp.zeros(3), "action": jnp.int32(0),
+          "done": jnp.float32(0)}
+    key = jax.random.key(0)
+    block = {
+        "obs": jax.random.normal(jax.random.fold_in(key, 0), (6, 4, 3)),
+        "reward": jax.random.normal(jax.random.fold_in(key, 1), (6, 4)),
+        "next_obs": jax.random.normal(jax.random.fold_in(key, 2), (6, 4, 3)),
+        "action": jnp.zeros((6, 4), jnp.int32),
+        "done": (jax.random.uniform(jax.random.fold_in(key, 3),
+                                    (6, 4)) < 0.2).astype(jnp.float32)}
+    s_blk = rb.add_block(rb.init(ex), block)
+    s_seq = rb.init(ex)
+    for t in range(6):
+        s_seq = rb.add_batch(s_seq, jax.tree.map(lambda x: x[t], block))
+    assert int(s_blk.size) == 4 * 4  # 2 warm-up steps emitted nothing
+    for a, b_ in zip(jax.tree.leaves(s_blk), jax.tree.leaves(s_seq)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_))
+
+
+def test_nstep_add_batch_rejects_wrong_width():
+    rb = ReplayBuffer(32, make_sampler("uniform", 32), n_step=2, num_envs=4)
+    ex = {"obs": jnp.zeros(2), "reward": jnp.float32(0),
+          "next_obs": jnp.zeros(2), "action": jnp.int32(0),
+          "done": jnp.float32(0)}
+    st = rb.init(ex)
+    with pytest.raises(ValueError, match="num_envs"):
+        rb.add_batch(st, jax.tree.map(
+            lambda x: jnp.zeros((3,) + jnp.shape(x), jnp.asarray(x).dtype),
+            ex))
+
+
 # --- strict-sync equivalence -------------------------------------------------
 
 def test_sync_requires_single_actor():
@@ -149,12 +247,16 @@ def test_sync_requires_single_actor():
         ReplayService(DQNConfig(), sync=True, num_actors=2)
 
 
-def test_sync_service_matches_scan_trainer():
+@pytest.mark.parametrize("agent,n_step", [("dqn", 1), ("double", 3),
+                                          ("dueling", 2)])
+def test_sync_service_matches_scan_trainer(agent, n_step):
     """`ReplayService(sync=True, num_actors=1)` reproduces the lax.scan
     trainer's CartPole learning curve (and final params) within float
-    tolerance — the strict synchronous mode is the scan trainer."""
-    cfg = DQNConfig(num_envs=1, replay_size=512, batch=32, learn_start=100,
-                    eps_decay_steps=500, target_sync=50)
+    tolerance — the strict synchronous mode is the scan trainer, across
+    the whole agent family including n-step replay (acceptance pin)."""
+    cfg = DQNConfig(agent=agent, n_step=n_step, num_envs=1, replay_size=512,
+                    batch=32, learn_start=100, eps_decay_steps=500,
+                    target_sync=50)
     key = jax.random.key(0)
     n = 300
     dqn = make_dqn(cfg)
@@ -172,11 +274,16 @@ def test_sync_service_matches_scan_trainer():
 
 # --- async mode: deferred feedback contract ----------------------------------
 
-@pytest.mark.parametrize("sampler", ["per-sumtree", "amper-fr"])
-def test_async_feedback_exactly_once_in_order(sampler):
+@pytest.mark.parametrize("sampler,agent,n_step",
+                         [("per-sumtree", "dqn", 1),
+                          ("amper-fr", "dqn", 1),
+                          ("amper-fr", "double", 3)])
+def test_async_feedback_exactly_once_in_order(sampler, agent, n_step):
     """Every learner batch's deferred priority update is applied exactly
-    once, in learner-step order, with non-negative measured staleness."""
-    cfg = DQNConfig(sampler=sampler, num_envs=2, replay_size=256, batch=16,
+    once, in learner-step order, with non-negative measured staleness —
+    including with per-actor n-step aggregation in the rollout path."""
+    cfg = DQNConfig(sampler=sampler, agent=agent, n_step=n_step,
+                    num_envs=2, replay_size=256, batch=16,
                     learn_start=8, eps_decay_steps=200, target_sync=50,
                     v_max=8.0)
     svc = ReplayService(cfg, num_actors=2, chunk_len=4, slab=2,

@@ -1,0 +1,216 @@
+"""Statistical regression gates for the replay sampling laws.
+
+Turns ``benchmarks/fig7_sampling_error.py``'s eyeballed claim into
+tier-1 chi-square / KS gates at fixed seeds:
+
+* ``per-cumsum`` empirically matches the exact PER law p_i / Σ p
+  (priorities enter the sampler already alpha-exponentiated, so this IS
+  the p_i^α / Σ p^α law of Schaul et al.) — chi-square on item counts
+  and a KS test on the sampled-priority CDF.
+* AMPER's draw matches its *quantized piecewise-constant* target: CSP
+  membership is a function of the quantized priority value alone
+  (deterministic structure pin, AMPER-fr), and the full ``sample()``
+  pipeline is uniform over the CSP — a chi-square against the exact
+  conditional expectation obtained by enumerating the very CSP-build
+  keys ``sample()`` consumes, for amper-fr AND amper-k.
+
+Everything is seed-pinned, so these run deterministically; the fast
+gates are double-marked ``tier1`` + ``stats`` (they are the push gate
+for the paper's sampling-distribution claim), the heavier sweep is
+``stats`` only.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.scipy.special import gammaincc
+
+from repro.core.samplers import make_sampler
+
+BATCH, RUNS = 64, 100
+P_MIN = 1e-3  # gate: fail only on catastrophic distribution drift
+
+
+def chi2_pvalue(stat: float, df: int) -> float:
+    """Survival function of chi-square via the regularized upper
+    incomplete gamma (no scipy dependency)."""
+    return float(gammaincc(df / 2.0, stat / 2.0))
+
+
+def binned_chi2(observed: np.ndarray, expected: np.ndarray,
+                min_expected: float = 10.0) -> tuple[float, int]:
+    """Pearson chi-square with items aggregated (in fixed
+    expected-probability order, so the binning is data-independent)
+    into bins of expected count >= ``min_expected``."""
+    order = np.argsort(-expected, kind="stable")
+    o, e = observed[order], expected[order]
+    bins_o, bins_e = [], []
+    co = ce = 0.0
+    for oi, ei in zip(o, e):
+        co += oi
+        ce += ei
+        if ce >= min_expected:
+            bins_o.append(co)
+            bins_e.append(ce)
+            co = ce = 0.0
+    if ce > 0 or co > 0:  # fold the light tail into the last bin
+        if bins_e:
+            bins_o[-1] += co
+            bins_e[-1] += ce
+        else:
+            bins_o.append(co)
+            bins_e.append(ce)
+    o, e = np.asarray(bins_o), np.asarray(bins_e)
+    stat = float(np.sum((o - e) ** 2 / np.maximum(e, 1e-12)))
+    return stat, max(len(e) - 1, 1)
+
+
+# --- PER: exact p_i / sum law -------------------------------------------------
+
+
+@pytest.mark.tier1
+@pytest.mark.stats
+def test_per_cumsum_matches_exact_law_chi2():
+    n = 256
+    s = make_sampler("per-cumsum", n)
+    p = np.linspace(0.05, 1.0, n, dtype=np.float32)
+    st = s.update(s.init(), jnp.arange(n), jnp.asarray(p))
+    fn = jax.jit(lambda state, k: s.sample(state, k, BATCH))
+    key = jax.random.key(0)
+    counts = np.zeros(n)
+    for r in range(RUNS):
+        np.add.at(counts, np.asarray(fn(st, jax.random.fold_in(key, r))), 1)
+    expected = BATCH * RUNS * p / p.sum()
+    stat, df = binned_chi2(counts, expected)
+    # Stratified draws have sub-multinomial variance, so the statistic
+    # can only be conservative here — drift still blows it up.
+    assert chi2_pvalue(stat, df) > P_MIN, (stat, df)
+
+
+@pytest.mark.tier1
+@pytest.mark.stats
+def test_per_cumsum_ks_on_sampled_priorities():
+    """KS distance between the empirical CDF of sampled priority VALUES
+    (i.i.d. draws, stratified off) and the exact target CDF."""
+    n = 256
+    s = make_sampler("per-cumsum", n)
+    p = np.linspace(0.05, 1.0, n, dtype=np.float32)
+    st = s.update(s.init(), jnp.arange(n), jnp.asarray(p))
+    fn = jax.jit(lambda state, k: s.sample(state, k, BATCH, False))
+    key = jax.random.key(1)
+    counts = np.zeros(n)
+    for r in range(RUNS):
+        np.add.at(counts, np.asarray(fn(st, jax.random.fold_in(key, r))), 1)
+    draws = BATCH * RUNS
+    # items are already in ascending priority order (linspace)
+    ecdf = np.cumsum(counts) / draws
+    cdf = np.cumsum(p / p.sum())
+    d = float(np.max(np.abs(ecdf - cdf)))
+    # K(alpha=0.01) = 1.63; discrete support makes the bound conservative
+    assert d < 1.63 / np.sqrt(draws), d
+
+
+# --- AMPER: quantized piecewise-constant target -------------------------------
+
+
+def _amper(kind: str, n: int = 512, n_levels: int = 24, seed: int = 7):
+    """Sampler + state over priorities drawn from a small discrete value
+    set (so the quantized table has many duplicates — the regime where
+    the piecewise-constant structure is observable) with csp_capacity=n
+    (no compaction truncation: sample() is then EXACTLY uniform over the
+    selected set, making the conditional expectation enumerable)."""
+    s = make_sampler(kind, n, v_max=1.0, csp_capacity=n, m=8, lam_fr=2.0,
+                     csp_ratio=1.0, knn_mode="bisect")
+    key = jax.random.key(seed)
+    levels = np.linspace(0.05, 0.95, n_levels, dtype=np.float32)
+    prio = levels[np.asarray(
+        jax.random.randint(key, (n,), 0, n_levels))]
+    st = s.update(s.init(), jnp.arange(n), jnp.asarray(prio))
+    return s, st
+
+
+@pytest.mark.tier1
+def test_amper_fr_membership_piecewise_constant_in_quantized_priority():
+    """The fr CSP is a union of value ranges: membership must be a
+    function of the quantized priority value alone — two rows storing
+    the same value are either both in or both out, for any build key."""
+    s, st = _amper("amper-fr")
+    build = jax.jit(lambda state, k: s.build_csp(state, k).selected)
+    pq = np.asarray(st.pq)
+    order = np.argsort(pq, kind="stable")
+    dup = pq[order][1:] == pq[order][:-1]
+    assert dup.any()  # the fixture must actually exercise duplicates
+    for r in range(8):
+        sel = np.asarray(build(st, jax.random.fold_in(jax.random.key(3), r)))
+        sel_o = sel[order]
+        np.testing.assert_array_equal(sel_o[1:][dup], sel_o[:-1][dup])
+
+
+@pytest.mark.tier1
+@pytest.mark.stats
+@pytest.mark.parametrize("kind", ["amper-fr", "amper-k"])
+def test_amper_sample_matches_csp_target_chi2(kind):
+    """Full ``sample()`` pipeline vs the piecewise-constant target: the
+    expected per-item count is enumerated from the SAME CSP-build keys
+    sample() consumes (conditional expectation, zero estimation error),
+    so the chi-square isolates the uniform-over-CSP draw."""
+    s, st = _amper(kind)
+    n = int(st.pq.shape[0])
+    build = jax.jit(lambda state, k: s.build_csp(state, k).selected)
+    fn = jax.jit(lambda state, k: s.sample(state, k, BATCH))
+    key = jax.random.key(11)
+    counts = np.zeros(n)
+    expected = np.zeros(n)
+    for r in range(RUNS):
+        kr = jax.random.fold_in(key, r)
+        np.add.at(counts, np.asarray(fn(st, kr)), 1)
+        kcsp, _ = jax.random.split(kr)
+        sel = np.asarray(build(st, kcsp)).astype(np.float64)
+        cnt = sel.sum()
+        assert cnt > 0, f"empty CSP at draw {r}"
+        expected += BATCH * sel / cnt
+    np.testing.assert_allclose(expected.sum(), counts.sum())
+    stat, df = binned_chi2(counts, expected)
+    assert chi2_pvalue(stat, df) > P_MIN, (kind, stat, df)
+
+
+@pytest.mark.tier1
+@pytest.mark.stats
+def test_amper_fr_expected_probability_piecewise_constant():
+    """The induced per-item law itself is piecewise constant over the
+    quantized value: enumerated expected probabilities are equal for
+    equal stored values."""
+    s, st = _amper("amper-fr")
+    n = int(st.pq.shape[0])
+    build = jax.jit(lambda state, k: s.build_csp(state, k).selected)
+    key = jax.random.key(11)
+    expected = np.zeros(n)
+    for r in range(RUNS):
+        kcsp, _ = jax.random.split(jax.random.fold_in(key, r))
+        sel = np.asarray(build(st, kcsp)).astype(np.float64)
+        expected += sel / sel.sum()
+    pq = np.asarray(st.pq)
+    for val in np.unique(pq):
+        grp = expected[pq == val]
+        np.testing.assert_allclose(grp, grp[0], rtol=1e-12)
+
+
+@pytest.mark.stats
+@pytest.mark.parametrize("kind", ["amper-fr", "amper-k"])
+def test_amper_sample_matches_csp_target_chi2_heavy(kind):
+    """Extended-job version of the gate: 4x the table, 3x the draws."""
+    s, st = _amper(kind, n=2048, n_levels=48, seed=13)
+    n = int(st.pq.shape[0])
+    build = jax.jit(lambda state, k: s.build_csp(state, k).selected)
+    fn = jax.jit(lambda state, k: s.sample(state, k, BATCH))
+    key = jax.random.key(17)
+    counts = np.zeros(n)
+    expected = np.zeros(n)
+    for r in range(3 * RUNS):
+        kr = jax.random.fold_in(key, r)
+        np.add.at(counts, np.asarray(fn(st, kr)), 1)
+        kcsp, _ = jax.random.split(kr)
+        sel = np.asarray(build(st, kcsp)).astype(np.float64)
+        expected += BATCH * sel / sel.sum()
+    stat, df = binned_chi2(counts, expected)
+    assert chi2_pvalue(stat, df) > P_MIN, (kind, stat, df)
