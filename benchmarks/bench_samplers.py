@@ -9,15 +9,92 @@ the XLA AMPER path is the honest CPU speed proxy.
 """
 from __future__ import annotations
 
+import time
+
 import jax
+import jax.extend.core as jex_core
 import jax.numpy as jnp
 
 import repro.core.quantize as qz
 from benchmarks.common import csv_row, time_fn
 from repro.core.amper import AmperConfig, AmperSampler
+from repro.core.hwmodel import HwConfig, latency_fr_ns
+from repro.kernels.common import force_interpret
 from repro.core.per import CumsumPER, SumTreePER
 
 BATCH = 64
+CSP_RATIO = 0.15
+
+
+# Pointwise / layout primitives XLA reliably fuses into a neighbouring
+# kernel: they do not launch dispatches of their own.  Everything NOT in
+# this set (RNG, reductions, cumsum, sort, gather/scatter, dot,
+# pallas_call, ...) is charged as one dispatch.
+_FUSIBLE = frozenset({
+    "add", "sub", "mul", "div", "rem", "neg", "abs", "sign", "max", "min",
+    "and", "or", "xor", "not", "shift_left", "shift_right_logical",
+    "shift_right_arithmetic", "integer_pow", "pow", "exp", "log", "sqrt",
+    "rsqrt", "floor", "ceil", "round", "clamp", "is_finite",
+    "lt", "le", "gt", "ge", "eq", "ne", "select_n", "convert_element_type",
+    "broadcast_in_dim", "reshape", "squeeze", "slice", "pad", "transpose",
+    "iota", "stop_gradient", "copy",
+})
+
+
+def _sub_jaxprs(params):
+    """Yield every Jaxpr nested in an equation's params (pjit, scan, cond...)."""
+    for v in params.values():
+        leaves = v if isinstance(v, (tuple, list)) else (v,)
+        for leaf in leaves:
+            if isinstance(leaf, jex_core.ClosedJaxpr):
+                yield leaf.jaxpr
+            elif isinstance(leaf, jex_core.Jaxpr):
+                yield leaf
+
+
+def _count_eqns(jaxpr) -> tuple[int, int]:
+    """Recursive (total_eqns, launch_eqns) over a jaxpr.
+
+    ``pallas_call`` counts as ONE launch regardless of its inner body —
+    that is the whole point of fusing — while structured control flow
+    (pjit/scan/cond/while) is charged the cost of its sub-jaxpr instead
+    of 1.  ``launch_eqns`` excludes the ``_FUSIBLE`` pointwise/layout
+    chaff that XLA folds into neighbouring kernels, so it approximates
+    kernel launches per draw; ``total_eqns`` is the raw count.
+    """
+    total = launches = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            total += 1
+            launches += 1
+            continue
+        subs = list(_sub_jaxprs(eqn.params))
+        if subs:
+            for s in subs:
+                t, l = _count_eqns(s)
+                total += t
+                launches += l
+        else:
+            total += 1
+            launches += eqn.primitive.name not in _FUSIBLE
+    return total, launches
+
+
+def dispatch_count(fn, *args) -> tuple[int, int]:
+    """(total_eqns, launch_eqns) traced for ``fn(*args)``, fused kernel = 1.
+
+    Traced under ``force_interpret(False)`` so the count reflects the real
+    TPU lowering (one ``pallas_call``) even on a CPU host — tracing never
+    executes the kernel, so this is safe off-TPU.
+
+    The override is invisible to jax's global trace cache (keyed on
+    function identity + avals), so the poisoned-for-CPU jaxpr traced here
+    must not leak into later executions: caches are cleared on exit.
+    """
+    with force_interpret(False):
+        closed = jax.make_jaxpr(fn)(*args)
+    jax.clear_caches()
+    return _count_eqns(closed.jaxpr)
 
 
 def run(sizes=(10_000, 100_000, 1_000_000), verbose: bool = True):
@@ -39,19 +116,88 @@ def run(sizes=(10_000, 100_000, 1_000_000), verbose: bool = True):
         cfg = AmperConfig(capacity=n, m=20, lam_fr=2.0, v_max=1.0,
                           csp_capacity=max(int(n * 0.15), BATCH),
                           knn_mode="bisect")
-        for variant in ("fr", "k"):
-            amp = AmperSampler(cfg, variant)
+        amper_t = {}
+        for label, variant, mode in (("fr", "fr", "broadcast"),
+                                     ("fr-fused", "fr", "fused"),
+                                     ("k", "k", "broadcast")):
+            amp = AmperSampler(cfg._replace(fr_mode=mode), variant)
             s3 = amp.update(amp.init(), jnp.arange(n), prio)
-            t = time_fn(jax.jit(lambda s, k: amp.sample(s, k, BATCH)), s3, key)
+            t = time_fn(jax.jit(lambda s, k, a=amp: a.sample(s, k, BATCH)),
+                        s3, key)
             tu = time_fn(jax.jit(amp.update), s3,
                          jnp.arange(BATCH, dtype=jnp.int32), prio[:BATCH])
-            rows.append((f"amper-{variant}/n{n}", t, tu))
+            amper_t[label] = t
+            rows.append((f"amper-{label}/n{n}", t, tu))
         rows.append((f"per-sumtree/n{n}", t_tree, tu_tree))
         rows.append((f"per-cumsum/n{n}", t_cum, 0.0))
         if verbose:
             print(f"bench n={n}: sumtree sample={t_tree:.0f}us "
                   f"update={tu_tree:.0f}us | cumsum={t_cum:.0f}us | "
-                  f"amper-fr={rows[-4][1]:.0f}us amper-k={rows[-3][1]:.0f}us")
+                  f"amper-fr={amper_t['fr']:.0f}us "
+                  f"amper-fr-fused={amper_t['fr-fused']:.0f}us "
+                  f"amper-k={amper_t['k']:.0f}us")
+    return rows
+
+
+def _time_update_donated(amp, state, idx, prio, iters: int = 8) -> float:
+    """Per-call µs for ``update`` with the priority table donated.
+
+    Donation invalidates the input buffers, so instead of re-timing one
+    frozen state we thread the state through a chain of donated calls —
+    exactly the steady-state pattern the async runtime uses.
+    """
+    upd = jax.jit(amp.update, donate_argnums=(0,))
+    st = jax.tree.map(jnp.copy, state)
+    st = upd(st, idx, prio)          # compile outside the timed region
+    jax.block_until_ready(st)
+    st = jax.tree.map(jnp.copy, state)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        st = upd(st, idx, prio)
+    jax.block_until_ready(st)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run_sampling(sizes=(10_000, 100_000), verbose: bool = True):
+    """The fused-kernel scorecard: dispatches per draw, per-draw latency,
+    and the measured-vs-roofline gap against the paper's analytical
+    AMPER-fr hardware model (``hwmodel.latency_fr_ns``).
+
+    ``dispatches`` is the recursive jaxpr-equation count of one ``sample``
+    call (pallas_call == 1); it is host-independent, so the >=2x fused
+    reduction holds even when this runs on a CPU where the interpret-mode
+    kernel's wall-time does not reflect TPU speed.
+    """
+    rows = []
+    key = jax.random.key(1)
+    for n in sizes:
+        prio = jax.random.uniform(jax.random.key(0), (n,)) + 0.01
+        roofline_ns = latency_fr_ns(
+            HwConfig(er_size=n, m=20, csp_ratio=CSP_RATIO, batch=BATCH))
+        cfg = AmperConfig(capacity=n, m=20, lam_fr=2.0, v_max=1.0,
+                          csp_capacity=max(int(n * CSP_RATIO), BATCH))
+        for mode in ("broadcast", "kernel", "fused"):
+            amp = AmperSampler(cfg._replace(fr_mode=mode), "fr")
+            s = amp.update(amp.init(), jnp.arange(n), prio)
+            # Distinct lambdas for counting vs timing: the trace cache is
+            # keyed on function identity, see dispatch_count.
+            eqns, disp = dispatch_count(
+                lambda st, k, a=amp: a.sample(st, k, BATCH), s, key)
+            t = time_fn(jax.jit(lambda st, k, a=amp: a.sample(st, k, BATCH)),
+                        s, key)
+            tu_don = _time_update_donated(
+                amp, s, jnp.arange(BATCH, dtype=jnp.int32), prio[:BATCH])
+            ratio = t * 1e3 / roofline_ns
+            rows.append((f"fr-{mode}/n{n}", t,
+                         f"dispatches={disp} eqns={eqns} "
+                         f"roofline_ns={roofline_ns:.0f} "
+                         f"measured_vs_roofline={ratio:.1f} "
+                         f"update_donated_us={tu_don:.1f}"))
+            if verbose:
+                print(f"sampling n={n} fr-{mode}: dispatches={disp} "
+                      f"eqns={eqns} sample={t:.0f}us "
+                      f"roofline={roofline_ns:.0f}ns "
+                      f"gap={ratio:.1f}x update_donated={tu_don:.0f}us")
     return rows
 
 
@@ -59,6 +205,8 @@ def main():
     for name, t_sample, t_update in run():
         print(csv_row(f"samplers/{name}", t_sample,
                       f"update_us={t_update:.1f}"))
+    for name, t_sample, derived in run_sampling():
+        print(csv_row(f"sampling/{name}", t_sample, derived))
 
 
 if __name__ == "__main__":

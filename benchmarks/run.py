@@ -14,6 +14,7 @@ has already performed by the time the section runs.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import os
 import subprocess
 import sys
@@ -25,10 +26,13 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="smaller sizes / fewer seeds")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig4,fig7,fig9,table1,samplers,venv,"
-                         "sharded,runtime,replay")
+                    help="comma list: fig4,fig7,fig9,table1,samplers,"
+                         "sampling,venv,sharded,runtime,replay")
     ap.add_argument("--out", default=".",
                     help="directory for the BENCH_*.json artifacts")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap each benched section in jax.profiler.trace; "
+                         "traces land under <out>/profile/<section>")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     failures = []
@@ -41,7 +45,16 @@ def main() -> None:
             return
         print(f"\n=== {name} ===", flush=True)
         try:
-            rows = fn()
+            if args.profile:
+                import jax
+
+                trace_dir = os.path.join(args.out, "profile", name)
+                print(f"profiler trace -> {trace_dir}", flush=True)
+                ctx = jax.profiler.trace(trace_dir)
+            else:
+                ctx = contextlib.nullcontext()
+            with ctx:
+                rows = fn()
         except Exception:
             failures.append(name)
             traceback.print_exc()
@@ -84,6 +97,8 @@ def main() -> None:
     section("samplers", lambda: bench_samplers.run(
         sizes=(10_000, 100_000) if args.quick else
         (10_000, 100_000, 1_000_000)))
+    section("sampling", lambda: bench_samplers.run_sampling(
+        sizes=(10_000,) if args.quick else (10_000, 100_000)))
     section("venv", lambda: bench_vector_env.run(
         widths=(1, 16) if args.quick else (1, 4, 16, 64),
         steps=1000 if args.quick else 2000))

@@ -46,10 +46,13 @@ class AmperConfig(NamedTuple):
         "hist" (shared cumulative histogram — 2 table passes).
       fr_mode: "broadcast" ((m,N) compare, the faithful m-query search),
         "interval" (merged-interval stabbing, one table pass), "window"
-        (per-row neighbour-group gather, O(ceil(2*lam')) ops/row) or
+        (per-row neighbour-group gather, O(ceil(2*lam')) ops/row),
         "kernel" (fused Pallas multi-query kernel, one HBM pass;
-        interpret mode off-TPU).  All four produce bit-identical CSP
-        membership.
+        interpret mode off-TPU) or "fused" (the whole draw — match, CSP
+        count, threefry pick, rank gather — in ONE Pallas dispatch via
+        :func:`repro.kernels.ops.amper_sample`; membership queries fall
+        back to the "kernel" path).  All five produce bit-identical CSP
+        membership, sampled indices and importance weights.
     """
 
     capacity: int
@@ -137,7 +140,10 @@ def build_csp_fr(pq: jax.Array, valid: jax.Array, key: jax.Array,
         non-zero priority.
       key: PRNG key for the group representatives.
     """
-    if cfg.fr_mode == "kernel":
+    if cfg.fr_mode in ("kernel", "fused"):
+        # "fused" only differs on the *sampling* path (AmperSampler.sample
+        # dispatches the whole draw as one kernel); explicit CSP builds
+        # share the fused-membership kernel.
         return build_csp_fr_kernel(pq, valid, key, cfg)
     kv, kroll = jax.random.split(key)
     v_rep = group_representatives(kv, cfg)
@@ -346,6 +352,18 @@ def build_csp_k(pq: jax.Array, valid: jax.Array, key: jax.Array,
     return _compact(selected, cfg.csp_capacity, kroll)
 
 
+def pick_uniform(bits: jax.Array, bound) -> jax.Array:
+    """Uniform int32 draw in [0, max(bound, 1)) from raw uint32 bits.
+
+    The ONE reduction law shared by the reference sampler and the fused
+    Pallas kernel's in-kernel threefry draw, so both paths map identical
+    bits to identical indices.  Plain modulo: the bias is bound/2^32
+    (< 1e-6 for any real CSP), invisible to the chi-square gates.
+    """
+    b = jnp.maximum(jnp.asarray(bound, jnp.int32), 1).astype(jnp.uint32)
+    return (bits % b).astype(jnp.int32)
+
+
 def sample_from_csp(csp: CspResult, key: jax.Array, batch: int,
                     fallback_size: jax.Array) -> jax.Array:
     """Algorithm 1 lines 14-17: uniform sample of the CSP.
@@ -354,11 +372,16 @@ def sample_from_csp(csp: CspResult, key: jax.Array, batch: int,
     priorities sit in one group and the representative misses), fall back
     to uniform over the live buffer — the same degenerate behaviour a
     hardware CSP buffer underflow would trigger.
+
+    Draws reduce raw ``jax.random.bits`` through :func:`pick_uniform`
+    (not ``randint``) so the fused kernel, recomputing the same threefry
+    stream in-kernel, reproduces them bit-for-bit.
     """
     k_pick, k_fb = jax.random.split(key)
-    u = jax.random.randint(k_pick, (batch,), 0, jnp.maximum(csp.count, 1))
+    u = pick_uniform(jax.random.bits(k_pick, (batch,), jnp.uint32), csp.count)
     picked = csp.indices[u]
-    fallback = jax.random.randint(k_fb, (batch,), 0, jnp.maximum(fallback_size, 1))
+    fallback = pick_uniform(jax.random.bits(k_fb, (batch,), jnp.uint32),
+                            fallback_size)
     return jnp.where(csp.count > 0, picked, fallback).astype(jnp.int32)
 
 
@@ -412,9 +435,37 @@ class AmperSampler:
                stratified: bool = True) -> jax.Array:
         del stratified  # CSP sampling is uniform by construction
         kcsp, kpick = jax.random.split(key)
+        if self.variant == "fr" and self.cfg.fr_mode == "fused":
+            return self._sample_fused(state, kcsp, kpick, batch)
         csp = self.build_csp(state, kcsp)
         live = jnp.sum(state.valid.astype(jnp.int32))
         return sample_from_csp(csp, kpick, batch, live)
+
+    def _sample_fused(self, state: AmperState, kcsp: jax.Array,
+                      kpick: jax.Array, batch: int) -> jax.Array:
+        """One Pallas dispatch for the whole draw (fr_mode="fused").
+
+        The key tree mirrors the reference exactly — kcsp -> (kv, kroll)
+        for representatives and the compaction rotation; kpick goes to the
+        kernel whole, which performs the reference's (k_pick, k_fb) split
+        in-kernel — so the in-kernel threefry consumes the very streams
+        the reference would, and indices come out bit-identical.
+        """
+        from repro.kernels import ops as kops  # deferred: kernels are optional
+
+        cfg = self.cfg
+        if cfg.frac_bits > 24:
+            raise ValueError(
+                f"fr_mode='fused' needs frac_bits <= 24 (one-hot f32 "
+                f"gathers are exact below 2^24), got {cfg.frac_bits}")
+        kv, kroll = jax.random.split(kcsp)
+        v_rep = group_representatives(kv, cfg)
+        lo, hi = fr_intervals(v_rep, cfg)
+        shift = jax.random.randint(kroll, (), 0, cfg.capacity)
+        idx, _stats = kops.amper_sample(
+            state.pq, state.valid, lo, hi, shift, kpick,
+            batch=batch, csp_capacity=cfg.csp_capacity)
+        return idx
 
 
 def make_sampler(kind: str, capacity: int, **kw):

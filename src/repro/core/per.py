@@ -161,13 +161,29 @@ def beta_schedule(beta0: float, beta_end: float, step: jax.Array,
     return beta0 + (beta_end - beta0) * frac
 
 
+def importance_from_selected(p_sel: jax.Array, total: jax.Array,
+                             size: jax.Array,
+                             beta: float | jax.Array) -> jax.Array:
+    """PER IS weights from already-gathered priorities (Schaul et al. Eq. 2).
+
+    The ONE weight formula every sampling path shares: the reference
+    XLA pipeline and the fused Pallas kernel both gather ``p_sel`` (the
+    priorities of the sampled rows) and hand it here with the same
+    normalisation constant ``total`` — hoisted out of the per-draw path
+    so the two cannot drift.  Bit-identical indices therefore imply
+    bit-identical weights.
+    """
+    total = jnp.maximum(total, 1e-12)
+    p = jnp.maximum(p_sel, 1e-12) / total
+    w = (size.astype(jnp.float32) * p) ** (-beta)
+    return w / jnp.maximum(jnp.max(w), 1e-12)
+
+
 def importance_weights(priorities: jax.Array, idx: jax.Array, size: jax.Array,
                        beta: float | jax.Array) -> jax.Array:
     """PER importance-sampling weights, max-normalised (Schaul et al. Eq. 2).
 
     ``beta`` may be a traced scalar (annealed schedules thread it through
     jitted sampling)."""
-    total = jnp.maximum(jnp.sum(priorities), 1e-12)
-    p_sel = jnp.maximum(priorities[idx], 1e-12) / total
-    w = (size.astype(jnp.float32) * p_sel) ** (-beta)
-    return w / jnp.maximum(jnp.max(w), 1e-12)
+    return importance_from_selected(priorities[idx], jnp.sum(priorities),
+                                    size, beta)

@@ -45,7 +45,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.per import importance_weights
+from repro.core.per import importance_from_selected
 from repro.core.samplers import masked_update
 
 
@@ -297,8 +297,11 @@ class ReplayBuffer:
         idx = self.sampler.sample(state.sampler_state, key, batch)
         batch_tree = jax.tree.map(lambda buf: buf[idx], state.storage)
         prios = self.sampler.priorities(state.sampler_state)
-        w = importance_weights(prios, idx, jnp.maximum(state.size, 1),
-                               self.beta if beta is None else beta)
+        # Shared weight formula (one normalisation constant for the
+        # reference and fused paths — see per.importance_from_selected).
+        w = importance_from_selected(prios[idx], jnp.sum(prios),
+                                     jnp.maximum(state.size, 1),
+                                     self.beta if beta is None else beta)
         return idx, batch_tree, w
 
     def stamps(self, state: ReplayState, idx: jax.Array) -> jax.Array:

@@ -27,7 +27,10 @@ the replay buffer and the DQN agent use them unchanged.
 
 Shared kwargs vocabulary (all optional):
   m, lam_fr, csp_ratio, v_max, knn_mode, fr_mode, exact_radius,
-  frac_bits  — AMPER hyper-parameters (Algorithm 1);
+  frac_bits  — AMPER hyper-parameters (Algorithm 1); ``fr_mode`` picks
+  the search implementation (broadcast / interval / window / kernel /
+  fused — "fused" runs the whole draw as one Pallas dispatch, see
+  :mod:`repro.kernels.amper_sample`), all bit-identical;
   csp_capacity — overrides the csp_ratio-derived CSP size;
   min_csp      — floor for the derived CSP size (usually the train batch);
   mesh, axis_names, local_csp_capacity — sharded samplers only: the mesh

@@ -42,7 +42,10 @@ The per-shard match path honours every ``AmperConfig.fr_mode`` including
 ``"kernel"``: the fused Pallas :func:`repro.kernels.ops.multi_query_match`
 kernel runs on each shard's local slice (one HBM pass per shard; interpret
 mode off-TPU), i.e. the paper's TCAM search executes inside the sampling
-pipeline, sharded.
+pipeline, sharded.  ``fr_mode="fused"`` additionally replaces each shard's
+``nonzero``-compaction + gather pick with the streaming
+:func:`repro.kernels.ops.rank_select` kernel — same draws, same owners,
+bit-identical indices, one pass instead of a materialised index buffer.
 """
 from __future__ import annotations
 
@@ -103,7 +106,7 @@ def _local_match_fr(pq_local: jax.Array, valid_local: jax.Array, v_rep: jax.Arra
         from repro.core.amper import _window_membership
         lo, hi = fr_intervals(v_rep, cfg)
         return _window_membership(pq_local, lo, hi, cfg) & valid_local
-    if cfg.fr_mode == "kernel":
+    if cfg.fr_mode in ("kernel", "fused"):
         # Fused Pallas kernel: all m range queries in ONE pass over this
         # shard's slice of HBM (interpret mode off-TPU).  A prefix query
         # with don't-care mask M is exactly the range [q&~M, (q&~M)|M],
@@ -132,9 +135,31 @@ def _fr_sample_body(cfg: AmperConfig, batch: int, axis_names: tuple[str, ...],
         kq, kpick = jax.random.split(key)
         kpick, kfb = jax.random.split(kpick)  # fallback gets its OWN key
         v_rep = group_representatives(kq, cfg)  # identical on all shards
-        selected = _local_match_fr(pq_local, valid_local, v_rep, cfg)
-        (loc_idx,) = jnp.nonzero(selected, size=local_cap, fill_value=0)
-        loc_count = jnp.minimum(jnp.sum(selected.astype(jnp.int32)), local_cap)
+        if cfg.fr_mode == "fused":
+            # Fused pick: the rank-select kernel turns each owned draw
+            # straight into its member index in one pass over the shard's
+            # slice — no compacted index buffer.  Membership (and hence
+            # counts, owners, offsets) reuses the multi-query kernel, so
+            # the whole draw is bit-identical to the reference modes:
+            # rank r in index order IS nonzero(selected)[r].
+            from repro.kernels import ops as kops
+            selected = _local_match_fr(pq_local, valid_local, v_rep, cfg)
+            loc_count = jnp.minimum(
+                jnp.sum(selected.astype(jnp.int32)), local_cap)
+
+            def pick_local(offset):
+                lo, hi = fr_intervals(v_rep, cfg)
+                idx, _cnt = kops.rank_select(pq_local, valid_local, lo, hi,
+                                             offset)
+                return idx
+        else:
+            selected = _local_match_fr(pq_local, valid_local, v_rep, cfg)
+            (loc_idx,) = jnp.nonzero(selected, size=local_cap, fill_value=0)
+            loc_count = jnp.minimum(
+                jnp.sum(selected.astype(jnp.int32)), local_cap)
+
+            def pick_local(offset):
+                return loc_idx[jnp.clip(offset, 0, local_cap - 1)]
 
         counts = jax.lax.all_gather(loc_count, axis_names, tiled=False)
         counts = counts.reshape(-1)  # (n_shards,)
@@ -149,7 +174,7 @@ def _fr_sample_body(cfg: AmperConfig, batch: int, axis_names: tuple[str, ...],
 
         me = _flat_axis_index(axis_names)
         mine = owner == me
-        local_pick = loc_idx[jnp.clip(offset, 0, local_cap - 1)].astype(jnp.int32)
+        local_pick = pick_local(offset).astype(jnp.int32)
         contrib = jnp.where(mine, local_pick + me * n_local, 0)
         picked = jax.lax.psum(contrib, axis_names)
 

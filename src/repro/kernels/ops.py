@@ -12,48 +12,45 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import amper_sample as _as
 from repro.kernels import decode_attention as _da
 from repro.kernels import flash_attention as _fa
 from repro.kernels import tcam_match as _tm
+from repro.kernels.common import (LANES, auto_block_rows as _auto_block_rows,
+                                  force_interpret,
+                                  interpret_default as _interpret_default,
+                                  pad_table as _pad_table)
 
-LANES = _tm.LANES
+__all__ = ["LANES", "force_interpret", "tcam_match", "multi_query_match",
+           "amper_sample", "rank_select", "flash_attention",
+           "decode_attention"]
 
 
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
+def _jit_kernel(fn, *, static=()):
+    """``jax.jit`` with ``interpret=None`` resolved OUTSIDE the trace cache.
 
-
-def _auto_block_rows(n: int) -> int:
-    """Largest sensible row-block for an n-element table.
-
-    Small tables (e.g. one shard of a sharded replay ring) would otherwise
-    pad to the full 64x128 default tile; capping the block at the table's
-    own row count keeps the padding (and the interpret-mode cost on CPU)
-    proportional to the input.  Rounded up to a multiple of 8 rows so the
-    (block_rows, 128) int32 block always satisfies Mosaic's (8, 128)
-    sublane tiling when the kernel really compiles on TPU.
+    The interpret default depends on ambient state (backend +
+    :func:`force_interpret` override), so it must be folded into the jit
+    cache key as the actual bool.  Resolving it inside the jitted body
+    would let the first call under ``force_interpret`` poison the cached
+    entry for ``interpret=None`` with the wrong lowering.
     """
-    rows = -(-n // LANES)
-    return min(_tm.DEFAULT_BLOCK_ROWS, max(8, 8 * (-(-rows // 8))))
+    jitted = jax.jit(fn, static_argnames=tuple(static) + ("interpret",))
+
+    @functools.wraps(fn)
+    def wrapper(*args, interpret=None, **kwargs):
+        if interpret is None:
+            interpret = _interpret_default()
+        return jitted(*args, interpret=interpret, **kwargs)
+
+    return wrapper
 
 
-def _pad_table(pq: jax.Array, valid: jax.Array, block_rows: int):
-    """Pad a flat int32 table to (R, 128) with R % block_rows == 0."""
-    n = pq.shape[0]
-    tile = block_rows * LANES
-    n_pad = -n % tile
-    pq = jnp.pad(pq, (0, n_pad), constant_values=-1)
-    valid = jnp.pad(valid, (0, n_pad), constant_values=False)
-    rows = (n + n_pad) // LANES
-    return pq.reshape(rows, LANES), valid.reshape(rows, LANES), n
-
-
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(_jit_kernel, static=("block_rows",))
 def tcam_match(pq: jax.Array, query: jax.Array, mask: jax.Array, *,
                block_rows: int | None = None,
-               interpret: bool | None = None) -> jax.Array:
+               interpret: bool = False) -> jax.Array:
     """Single ternary-CAM query over a flat int32[n] table -> bool[n]."""
-    interpret = _interpret_default() if interpret is None else interpret
     block_rows = _auto_block_rows(pq.shape[0]) if block_rows is None else block_rows
     pq2, _, n = _pad_table(pq, jnp.ones_like(pq, jnp.bool_), block_rows)
     out = _tm.tcam_match(pq2, jnp.asarray(query, jnp.int32),
@@ -62,17 +59,16 @@ def tcam_match(pq: jax.Array, query: jax.Array, mask: jax.Array, *,
     return out.reshape(-1)[:n]
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(_jit_kernel, static=("block_rows",))
 def multi_query_match(pq: jax.Array, valid: jax.Array, lo: jax.Array,
                       hi: jax.Array, *,
                       block_rows: int | None = None,
-                      interpret: bool | None = None):
+                      interpret: bool = False):
     """Fused m-range AMPER search over a flat table.
 
     Returns (sel bool[n], counts int32[m]).  Padding rows carry pq = -1
     (matches no non-negative range) and valid = False.
     """
-    interpret = _interpret_default() if interpret is None else interpret
     block_rows = _auto_block_rows(pq.shape[0]) if block_rows is None else block_rows
     pq2, valid2, n = _pad_table(pq, valid, block_rows)
     sel, counts = _tm.multi_query_match(
@@ -81,14 +77,68 @@ def multi_query_match(pq: jax.Array, valid: jax.Array, lo: jax.Array,
     return sel.reshape(-1)[:n], counts
 
 
-@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bkv",
-                                             "interpret"))
+@functools.partial(_jit_kernel, static=("batch", "csp_capacity",
+                                        "block_rows"))
+def amper_sample(pq: jax.Array, valid: jax.Array, lo: jax.Array,
+                 hi: jax.Array, shift: jax.Array, key: jax.Array,
+                 *, batch: int, csp_capacity: int,
+                 block_rows: int | None = None,
+                 interpret: bool = False):
+    """The whole AMPER-fr draw fused into one Pallas dispatch.
+
+    match + CSP count + in-kernel key split + threefry draw + rank gather
+    over a flat int32[n] table; bit-identical to the reference
+    ``_compact`` + ``sample_from_csp`` pipeline under the same
+    (shift, key) randomness.
+
+    Args:
+      pq, valid: flat int32[n] / bool[n] table.
+      lo, hi: int32[m] inclusive range bounds per group.
+      shift: int32 scalar compaction rotation (``randint(kroll, (), 0, n)``).
+      key: typed PRNG key of the pick key (the kernel performs the
+        pick/fallback ``split`` itself, bit-exact with ``jax.random``).
+      batch: number of draws (static).
+      csp_capacity: CSP buffer capacity (static).
+
+    Returns:
+      (idx int32[batch], stats int32[4] = [members, members below shift,
+      live rows, truncated CSP count]).
+    """
+    block_rows = _auto_block_rows(pq.shape[0]) if block_rows is None else block_rows
+    pq2, valid2, n = _pad_table(pq, valid, block_rows)
+    idx, stats = _as.amper_sample(
+        pq2, valid2, lo.astype(jnp.int32), hi.astype(jnp.int32),
+        jnp.asarray(shift, jnp.int32),
+        jax.random.key_data(key).astype(jnp.uint32),
+        batch=batch, csp_capacity=csp_capacity, n_real=n,
+        block_rows=block_rows, interpret=interpret)
+    return idx, stats
+
+
+@functools.partial(_jit_kernel, static=("block_rows",))
+def rank_select(pq: jax.Array, valid: jax.Array, lo: jax.Array,
+                hi: jax.Array, rank: jax.Array, *,
+                block_rows: int | None = None,
+                interpret: bool = False):
+    """Index of each rank-th member of the fused m-range match (one pass).
+
+    Streaming replacement for ``nonzero``-compaction + gather on the
+    sharded per-shard pick path.  Ranks >= member count return 0 (callers
+    mask by ownership).  Returns (idx int32[batch], count int32 scalar).
+    """
+    block_rows = _auto_block_rows(pq.shape[0]) if block_rows is None else block_rows
+    pq2, valid2, _n = _pad_table(pq, valid, block_rows)
+    return _as.rank_select(pq2, valid2, lo.astype(jnp.int32),
+                           hi.astype(jnp.int32), rank.astype(jnp.int32),
+                           block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(_jit_kernel, static=("causal", "window", "bq", "bkv"))
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int | None = None,
                     bq: int = 128, bkv: int = 128,
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool = False) -> jax.Array:
     """Blockwise attention with seq/head-dim padding to tile boundaries."""
-    interpret = _interpret_default() if interpret is None else interpret
     b, hq, s, d = q.shape
     s_pad = -s % max(bq, bkv)
     d_pad = -d % LANES
@@ -113,12 +163,11 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out
 
 
-@functools.partial(jax.jit, static_argnames=("bkv", "interpret"))
+@functools.partial(_jit_kernel, static=("bkv",))
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      cur_len, *, bkv: int = 512,
-                     interpret: bool | None = None) -> jax.Array:
+                     interpret: bool = False) -> jax.Array:
     """Single-token cache attention; pads S and D to tile boundaries."""
-    interpret = _interpret_default() if interpret is None else interpret
     b, hkv, group, d = q.shape
     s_len = k.shape[2]
     s_pad = -s_len % bkv

@@ -32,8 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-LANES = 128
-DEFAULT_BLOCK_ROWS = 64  # (64, 128) int32 tile = 32 KiB VMEM per operand
+from repro.kernels.common import DEFAULT_BLOCK_ROWS, LANES
 
 
 def tcam_match_kernel(q_ref, mask_ref, p_ref, out_ref):

@@ -130,8 +130,18 @@ class ReplayService:
                               donate_argnums=donate)
         # Actors pre-aggregate n-step rows in their own accumulators, so
         # the canonical buffer must not run its accumulator again.
+        # The transition block is consumed by exactly this one write, so
+        # its buffers are donated (off-CPU, as above).  The replay STATE
+        # is never donated here or in the feedback apply: the prefetcher
+        # snapshots self._bstate by reference and may be mid-draw on the
+        # same buffers when the next write lands — donating the table
+        # would invalidate the arrays under it.  XLA still updates the
+        # priority rows in place inside the dispatch; donation would only
+        # save the copy of the *unchanged* leaves, and correctness wins.
+        donate_block = () if jax.default_backend() == "cpu" else (1,)
         self._add_block = jax.jit(
-            functools.partial(rb.add_block, aggregated=True))
+            functools.partial(rb.add_block, aggregated=True),
+            donate_argnums=donate_block)
 
         def apply_feedback(state, idx, td, stamp):
             # Flatten [S, batch] row-major: masked_update resolves rows
@@ -142,7 +152,12 @@ class ReplayService:
             return rb.update_priorities(
                 state, flat(idx), flat(td), stamp=flat(stamp))
 
-        self._apply_feedback = jax.jit(apply_feedback)
+        # The feedback slab (idx/td/stamp) is consumed exactly once by
+        # this apply — donate those buffers; the state stays undonated
+        # (prefetcher aliasing, see above).
+        donate_fb = () if jax.default_backend() == "cpu" else (1, 2, 3)
+        self._apply_feedback = jax.jit(apply_feedback,
+                                       donate_argnums=donate_fb)
         self._agent_step = jax.jit(self.dqn.agent_step)
 
     # ------------------------------------------------------------------ #

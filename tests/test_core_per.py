@@ -79,3 +79,18 @@ def test_importance_weights(priorities):
     # lower priority -> larger weight
     lo, hi = int(jnp.argmin(priorities)), int(jnp.argmax(priorities))
     assert float(w[lo]) > float(w[hi])
+
+
+def test_importance_weights_shared_formula(priorities):
+    """importance_weights is a thin delegate of importance_from_selected:
+    the ONE weight formula both the reference and fused sampling paths
+    feed, with the normalisation constant hoisted out of the draw.  Pinned
+    bitwise — any drift between the two entry points breaks the fused
+    path's weight bit-identity guarantee."""
+    from repro.core.per import importance_from_selected
+    idx = jnp.asarray([3, 99, 511, 0, 3], jnp.int32)
+    for beta in (0.0, 0.4, 1.0):
+        a = importance_weights(priorities, idx, jnp.int32(512), beta)
+        b = importance_from_selected(priorities[idx], jnp.sum(priorities),
+                                     jnp.int32(512), beta)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -5,9 +5,12 @@ et al.: silently-divergent sampling distributions corrupt learning
 results, so the sharded fronts must provably draw by the same law as
 their single-device counterparts):
 
-* every ``fr_mode`` (broadcast / interval / window / kernel) produces
-  bit-identical CSP membership, including invalid rows and saturated
-  top-code priorities;
+* every ``fr_mode`` (broadcast / interval / window / kernel / fused)
+  produces bit-identical CSP membership, including invalid rows and
+  saturated top-code priorities;
+* ``fr_mode="fused"`` (the single-dispatch Pallas draw) returns
+  bit-identical sampled indices AND importance weights vs "broadcast",
+  on single-device and 2/8-shard meshes;
 * ``ShardedAmperSampler`` membership == single-device ``build_csp_fr``
   exactly, on 1/2/8-shard meshes;
 * ``ShardedPERSampler`` agrees with the PER law P(i) = p_i / sum p by
@@ -27,7 +30,7 @@ from repro.core.amper import AmperConfig, build_csp_fr
 from repro.core.replay_buffer import ReplayBuffer
 from repro.core.samplers import Sampler, available_samplers, make_sampler
 
-FR_MODES = ("broadcast", "interval", "window", "kernel")
+FR_MODES = ("broadcast", "interval", "window", "kernel", "fused")
 
 
 def _mesh_of(n_shards):
@@ -85,7 +88,7 @@ def test_fr_mode_kernel_through_registry():
 
 
 @pytest.mark.parametrize("n_shards", [1, 2, 8])
-@pytest.mark.parametrize("fr_mode", ["broadcast", "kernel"])
+@pytest.mark.parametrize("fr_mode", ["broadcast", "kernel", "fused"])
 def test_sharded_amper_membership_exact(n_shards, fr_mode):
     """Sharded CSP membership is bit-identical to single-device
     build_csp_fr under the same key, for any shard count."""
@@ -119,6 +122,67 @@ def test_sharded_amper_draws_within_membership(n_shards):
     members = np.asarray(s.membership(st, key))
     idx = np.asarray(s.sample(st, key, 512))
     assert members[idx].all(), "sampled a non-member row"
+
+
+# --- fused draw: bit-identical indices AND weights (acceptance) ---------------
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 8])
+def test_sharded_fused_sample_bit_identical(n_shards):
+    """fr_mode='fused' (rank_select pick) draws the exact indices of the
+    reference nonzero-compaction pick on real 1/2/8-shard meshes."""
+    mesh = _mesh_of(n_shards)
+    n = 2048
+    pq, valid, p = _random_table(17, n)
+    idx = {}
+    for mode in ("broadcast", "fused"):
+        s = make_sampler("amper-fr-sharded", n, v_max=1.0, m=8,
+                         fr_mode=mode, mesh=mesh)
+        st = s.update(s.init(), jnp.arange(n), jnp.where(valid, p, 0.0))
+        idx[mode] = np.asarray(s.sample(st, jax.random.key(23), 256))
+    np.testing.assert_array_equal(idx["fused"], idx["broadcast"])
+
+
+def test_fused_replay_weights_bit_identical():
+    """Acceptance: single-device replay buffer with fr_mode='fused' returns
+    bit-identical sampled indices AND importance weights vs 'broadcast'
+    (shared weight formula, importance_from_selected)."""
+    cap, b = 4096, 512
+    out = {}
+    for mode in ("broadcast", "fused"):
+        s = make_sampler("amper-fr", cap, v_max=4.0, fr_mode=mode)
+        rb = ReplayBuffer(cap, s)
+        state = rb.init({"obs": jnp.zeros(3), "reward": jnp.float32(0)})
+        for i in range(3):
+            state = rb.add_batch(
+                state, {"obs": jnp.full((b, 3), float(i)),
+                        "reward": jnp.arange(b, dtype=jnp.float32)})
+        idx, _, w = rb.sample(state, jax.random.key(3), 64)
+        out[mode] = (np.asarray(idx), np.asarray(w))
+    np.testing.assert_array_equal(out["fused"][0], out["broadcast"][0])
+    np.testing.assert_array_equal(out["fused"][1], out["broadcast"][1])
+
+
+@pytest.mark.parametrize("n_shards", [2, 8])
+def test_sharded_fused_replay_weights_bit_identical(n_shards):
+    """Acceptance: same bitwise idx+weights guarantee through the sharded
+    replay buffer on 2/8-shard meshes."""
+    mesh = _mesh_of(n_shards)
+    cap, b = 1024, 128
+    out = {}
+    for mode in ("broadcast", "fused"):
+        s = make_sampler("amper-fr-sharded", cap, v_max=4.0,
+                         fr_mode=mode, mesh=mesh)
+        rb = ReplayBuffer(cap, s)
+        state = rb.init({"obs": jnp.zeros(3), "reward": jnp.float32(0)})
+        for i in range(3):
+            state = rb.add_batch(
+                state, {"obs": jnp.full((b, 3), float(i)),
+                        "reward": jnp.arange(b, dtype=jnp.float32)})
+        idx, _, w = rb.sample(state, jax.random.key(29), 64)
+        out[mode] = (np.asarray(idx), np.asarray(w))
+    np.testing.assert_array_equal(out["fused"][0], out["broadcast"][0])
+    np.testing.assert_array_equal(out["fused"][1], out["broadcast"][1])
 
 
 # --- sharded PER == single device (distribution) -----------------------------
