@@ -1,15 +1,21 @@
-"""Durability cost: replay checkpoint save/restore latency and the
-pause->drain->snapshot->resume overhead of the async service.
+"""Durability cost: replay checkpoint save/restore latency, incremental
+delta-save throughput, and the copy-on-write snapshot cost of the async
+service.
 
 Rows answer the operational questions of the fault-tolerance subsystem:
 
 * how long does one atomic+fsync'd snapshot of a ReplayState take, and
   how does it scale with capacity (save = host gather + npz + fsync;
-  restore = npz load + device_put)?
-* what does periodic checkpointing cost the sync trainer (relative
-  overhead at a given interval)?
-* what does one full async quiesce cycle cost (pause the actor pool and
-  prefetcher, drain blocks + deferred feedback, write, resume)?
+  restore = npz load + device_put)?  And how much cheaper is a delta
+  save covering only a written ring arc (``replay_ckpt_delta_*``)?
+* what does periodic checkpointing cost the sync trainer
+  (``overhead_frac`` — wall-time overhead relative to an uncheckpointed
+  run; incremental single-file saves are what keep it low)?
+* what does an async snapshot cost now that it is copy-on-write
+  (``snapshot_pause_us`` — the learner-thread capture stall, the ONLY
+  pipeline stall a snapshot causes; ``drain_cycles`` counts full
+  pause→drain quiesce protocols and is structurally 0 since the COW
+  rework — the column tracks the regime change in the trajectory)?
 """
 from __future__ import annotations
 
@@ -25,6 +31,7 @@ from repro.core.replay_buffer import ReplayBuffer
 from repro.core.samplers import make_sampler
 from repro.rl.dqn import DQNConfig
 from repro.runtime import ReplayService
+from repro.train import checkpoint as ck
 from repro.train import replay_checkpoint as rck
 from repro.train.checkpoint import CheckpointManager
 
@@ -72,7 +79,38 @@ def _ckpt_rows(sizes):
             print(csv_row(name, us, derived))
             rows.append({"name": name, "us_per_call": us,
                          "bytes": nbytes, "mb_per_s": nbytes / max(us, 1)})
+        # Incremental: a delta covering a 1k-row ring arc (the steady
+        # state between saves) vs the full dump above.
+        arc = min(1024, cap)
+        marks = {"pos": 0, "total_adds": int(st.total_adds) - arc}
+        dirty = rck.replay_dirty(rb, st, marks)
+        with tempfile.TemporaryDirectory() as d:
+            ck.save_incremental(d, 1, st)
+            step = [2]
+
+            def delta_save():
+                ck.save_incremental(d, step[0], st, base_step=1,
+                                    dirty=dirty)
+                step[0] += 1
+
+            t_delta = _time_host(delta_save)
+        name = f"replay_ckpt_delta_n{cap}"
+        print(csv_row(name, t_delta, f"{arc}-row arc delta"))
+        rows.append({"name": name, "us_per_call": t_delta,
+                     "arc_rows": arc, "full_us": t_save})
     return rows
+
+
+def _median_wall(fn, trials: int = 3) -> float:
+    """Median wall seconds over ``trials`` calls (single-shot service
+    timings at this scale are ±20% — enough to swamp overhead_frac)."""
+    times = []
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
 
 
 def _service_rows(steps: int):
@@ -84,14 +122,17 @@ def _service_rows(steps: int):
     svc = ReplayService(cfg, sync=True, num_actors=1)
     key = jax.random.key(0)
     svc.run(key, steps)  # warmup/compile
-    t0 = time.perf_counter()
-    svc.run(key, steps)
-    base = time.perf_counter() - t0
-    with tempfile.TemporaryDirectory() as d:
-        mgr = CheckpointManager(d, save_interval=max(steps // 4, 1))
-        t0 = time.perf_counter()
-        svc.run(key, steps, manager=mgr)
-        ckpt = time.perf_counter() - t0
+    base = _median_wall(lambda: svc.run(key, steps))
+
+    def ckpt_cycle():
+        # fresh dir per trial: reusing one would resume-at-target and
+        # measure a no-op run
+        with tempfile.TemporaryDirectory() as d:
+            svc.run(key, steps,
+                    manager=CheckpointManager(
+                        d, save_interval=max(steps // 4, 1)))
+
+    ckpt = _median_wall(ckpt_cycle)
     n_saves = 4
     over = (ckpt - base) / n_saves * 1e6
     name = "sync_ckpt_cycle"
@@ -100,25 +141,44 @@ def _service_rows(steps: int):
     rows.append({"name": name, "us_per_call": over,
                  "overhead_frac": (ckpt - base) / base})
 
-    # async: full pause->drain->snapshot->resume cycle cost
+    # async: copy-on-write snapshot cost.  us_per_call is the wall-time
+    # overhead per snapshot (serialization overlaps the pipeline, so
+    # this can approach 0); snapshot_pause_us is the learner-thread
+    # capture stall — the only stall a COW snapshot inflicts.
     asvc = ReplayService(cfg, num_actors=2, chunk_len=4, slab=2,
                          queue_size=4, max_replay_ratio=64)
     asvc.run(key, 2 * asvc.slab)  # warmup/compile
-    t0 = time.perf_counter()
-    asvc.run(key, steps)
-    base = time.perf_counter() - t0
-    with tempfile.TemporaryDirectory() as d:
-        interval = max(steps // 4, asvc.slab)
-        mgr = CheckpointManager(d, save_interval=interval)
-        t0 = time.perf_counter()
-        asvc.run(key, steps, manager=mgr)
-        ckpt = time.perf_counter() - t0
-        n_saves = max(steps // interval, 1)
+    base = _median_wall(lambda: asvc.run(key, steps))
+    results = []
+
+    def snap_cycle():
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(
+                d, save_interval=max(steps // 4, asvc.slab))
+            results.append(asvc.run(key, steps, manager=mgr))
+
+    ckpt = _median_wall(snap_cycle)
+    # Pause stats aggregate every trial's snapshots, not just the
+    # median run's: the tail captures are the interesting ones.
+    snaps = [r.metrics["snapshot"] for r in results]
+    snap = {
+        "saved": snaps[-1]["saved"],
+        "pause_us_max": max(s["pause_us_max"] for s in snaps),
+        "pause_us_mean": (sum(s["pause_us_mean"] * s["count"] for s in snaps)
+                          / max(sum(s["count"] for s in snaps), 1)),
+        "drain_cycles": sum(s["drain_cycles"] for s in snaps),
+    }
+    n_saves = max(snap["saved"], 1)
     over = (ckpt - base) / n_saves * 1e6
     name = "async_snapshot_cycle"
     print(csv_row(name, max(over, 0.0),
-                  f"pause+drain+save+resume, {n_saves} cycles"))
-    rows.append({"name": name, "us_per_call": over, "cycles": n_saves})
+                  f"cow capture {snap['pause_us_mean']:.0f}us mean / "
+                  f"{snap['pause_us_max']:.0f}us max, {snap['saved']} "
+                  f"snapshots, {snap['drain_cycles']} drain cycles"))
+    rows.append({"name": name, "us_per_call": over, "cycles": n_saves,
+                 "snapshot_pause_us": snap["pause_us_max"],
+                 "snapshot_pause_us_mean": snap["pause_us_mean"],
+                 "drain_cycles": snap["drain_cycles"]})
     return rows
 
 

@@ -105,9 +105,12 @@ def main() -> None:
     section("runtime", lambda: bench_runtime.run(
         steps=200 if args.quick else 400,
         trials=2 if args.quick else 3))
+    # replay keeps the full 120-step service runs even in quick mode: a
+    # 60-step base is ~50ms of wall, short enough that overhead_frac is
+    # mostly measurement noise and checkpoint cadence artifacts.
     section("replay", lambda: bench_replay.run(
         sizes=(10_000,) if args.quick else (10_000, 100_000),
-        steps=60 if args.quick else 120))
+        steps=120))
     section("sharded", sharded_subprocess)
 
     if written:

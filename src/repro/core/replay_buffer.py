@@ -332,3 +332,38 @@ class ReplayBuffer:
             sampler_state=sampler_state,
             max_priority=jnp.maximum(state.max_priority, p_max),
         )
+
+
+def dirty_arcs(capacity: int, base_pos: int, n_new: int) -> list[tuple[int, int]]:
+    """Half-open ring row ranges written since a base snapshot.
+
+    ``base_pos`` is the write position captured at the base snapshot and
+    ``n_new = total_adds_now - total_adds_base`` the transitions written
+    since; both come from plain host ints read off captured states, so
+    the arc is exact, not an estimate.  Wrapping the capacity boundary
+    yields two ranges; ``n_new >= capacity`` means every row was
+    rewritten and the whole leading dim is dirty.  Host-side helper for
+    the incremental checkpoint layer (train/replay_checkpoint.py).
+    """
+    base_pos, n_new = int(base_pos), int(n_new)
+    if n_new <= 0:
+        return []
+    if n_new >= capacity:
+        return [(0, capacity)]
+    end = base_pos + n_new
+    if end <= capacity:
+        return [(base_pos, end)]
+    return [(base_pos, capacity), (0, end - capacity)]
+
+
+def rows_to_ranges(rows) -> list[tuple[int, int]]:
+    """Collapse a host iterable of touched row indices into sorted,
+    merged half-open ranges — the shape the checkpoint layer's ``Rows``
+    dirty spec takes."""
+    out: list[tuple[int, int]] = []
+    for r in sorted({int(r) for r in rows}):
+        if out and r == out[-1][1]:
+            out[-1] = (out[-1][0], r + 1)
+        else:
+            out.append((r, r + 1))
+    return out

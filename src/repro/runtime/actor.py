@@ -60,15 +60,22 @@ def put_with_stop(q: queue.Queue, item, stop: threading.Event,
 
 
 class PauseGate:
-    """Cooperative quiesce point for the pipeline threads.
+    """Cooperative quiesce point for the pipeline threads (optional).
 
-    The snapshot orchestrator calls :meth:`pause`; each worker thread
-    parks at its next :meth:`wait_if_paused` call (registering itself, so
+    An orchestrator calls :meth:`pause`; each worker thread parks at its
+    next :meth:`wait_if_paused` call (registering itself, so
     :meth:`wait_parked` can await full quiescence) and stays parked until
     :meth:`resume`.  Parking happens only at loop boundaries — after a
     worker's in-flight queue put has completed — so a fully-parked
-    pipeline has every produced item already in a queue, where the replay
-    thread (which never parks) can drain it before the snapshot is taken.
+    pipeline has every produced item already in a queue where a
+    non-parking drainer can consume it.
+
+    The replay service's checkpoints no longer use this: snapshots are
+    copy-on-write (``service._CowSnapshotter`` captures immutable state
+    references without pausing anything), so the service constructs its
+    pool and prefetcher with ``gate=None``.  The gate remains available
+    as a general quiesce utility for callers that do need a full stop
+    (e.g. debugging a live pipeline).
     """
 
     def __init__(self):
@@ -177,11 +184,13 @@ class Actor(threading.Thread):
         self.chunks_done = (0 if resume_state is None
                             else int(resume_state["chunk"]))
         self.error: BaseException | None = None
-        # Exact-resume snapshot slot: refreshed after every completed
-        # chunk's enqueue, so whenever this actor is parked (or joined)
-        # it describes the state the actor will continue from.  The PRNG
-        # stream is captured by the two integers: chunk c's rollout key
-        # is fold_in(roll_key, c) and never depends on wall history.
+        # Exact-resume snapshot slot: REPLACED (never mutated) with a
+        # fresh dict after every completed chunk's enqueue, so a reader
+        # on any thread — the COW snapshotter captures it live, without
+        # parking this actor — always sees a self-consistent
+        # chunk-boundary state.  The PRNG stream is captured by the two
+        # integers: chunk c's rollout key is fold_in(roll_key, c) and
+        # never depends on wall history.
         self.run_state: dict | None = None
 
     def run(self) -> None:

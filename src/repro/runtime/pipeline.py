@@ -145,10 +145,13 @@ class PrefetchPipeline(threading.Thread):
                 # replay.sample fall back to its constructor constant.
                 beta = (jnp.float32(self._beta_fn(version))
                         if self._beta_fn is not None else None)
-                if beta is not None:
-                    self.last_beta = float(beta)
                 idx, batch, weights, stamp = self._sample(
                     state, prng.sample_key(self._base_key, draw), beta)
+                # Publish β only once the draw has returned: a draw that
+                # raises must not leave metrics reporting the β of a
+                # slab that never existed.
+                if beta is not None:
+                    self.last_beta = float(beta)
                 draw += 1
                 self.draws = draw
                 if self._device is not None:

@@ -26,14 +26,20 @@ stack — params, optimizer moments, the canonical ``ReplayState``
 (storage, priority tables, write stamps, ``max_priority``, ring
 position), per-actor env states and PRNG stream positions, and the
 prefetcher's draw counter — and auto-resumes from the latest checkpoint.
-In async mode each snapshot runs a pause→drain→snapshot→resume protocol:
-the actor pool and the prefetcher park at a :class:`PauseGate`, the
-replay thread drains every enqueued transition block and every deferred
-priority feedback slab the learner has emitted, and only then is the
-quiescent state written (atomically, fsync'd).  In sync mode a killed
-run resumed from its checkpoint is BIT-IDENTICAL to an uninterrupted
-one (pinned by ``tests/test_resume.py``); async resume is tolerance-
-level by nature (thread interleaving changes which frames land first).
+Checkpoints are incremental (delta chains over the ring arcs and touched
+priority rows actually written since the last save — see
+``train/replay_checkpoint.replay_dirty``) and, in async mode,
+copy-on-write: nothing pauses.  The replay thread owns the canonical
+state as immutable pytrees, so :class:`_CowSnapshotter` captures the
+current state *reference* plus host counter watermarks on the learner
+thread (microseconds) and serializes on its own thread while actors,
+prefetcher, learner and replay thread keep running.  In-flight blocks
+and feedback slabs are simply absent from the snapshot; the stamped
+exactly-once feedback contract (PR 3) makes that safe on resume.  In
+sync mode a killed run resumed from its checkpoint is BIT-IDENTICAL to
+an uninterrupted one (pinned by ``tests/test_resume.py``); async resume
+is tolerance-level by nature (thread interleaving changes which frames
+land first).
 
 Metrics cover the questions the paper's latency story raises at system
 scale: learner steps/sec, environment frames/sec, queue depths (is the
@@ -54,8 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.rl.dqn import DQNConfig, make_dqn
-from repro.runtime.actor import (ActorPool, PauseGate, make_rollout,
-                                 put_with_stop)
+from repro.runtime.actor import ActorPool, make_rollout, put_with_stop
 from repro.runtime.learner import Feedback, Learner, make_slab_learner
 from repro.runtime.pipeline import PrefetchPipeline, make_slab_sampler
 from repro.train import checkpoint as ckpt_mod
@@ -154,11 +159,19 @@ class ReplayService:
 
         # The feedback slab (idx/td/stamp) is consumed exactly once by
         # this apply — donate those buffers; the state stays undonated
-        # (prefetcher aliasing, see above).
+        # (prefetcher aliasing, see above).  The dirty-row log for
+        # incremental snapshots takes a HOST copy of fb.idx before the
+        # apply runs, so donating idx stays safe.
         donate_fb = () if jax.default_backend() == "cpu" else (1, 2, 3)
         self._apply_feedback = jax.jit(apply_feedback,
                                        donate_argnums=donate_fb)
         self._agent_step = jax.jit(self.dqn.agent_step)
+        # (fb_applied_at_append, host idx rows) log the replay thread
+        # feeds and the COW snapshotter consumes; None when the run has
+        # no checkpoint manager (zero cost on the hot path).
+        self._fb_rows: collections.deque | None = None
+        # (learned, synced) -> cached non-buffer sync dirty tree.
+        self._sync_dirty_tpl: dict = {}
 
     # ------------------------------------------------------------------ #
 
@@ -231,7 +244,14 @@ class ReplayService:
                              f"{meta.get('mode')!r}-mode run, cannot "
                              f"resume in {mode!r} mode")
         for k, want in expected.items():
-            if meta.get(k, want) != want:
+            # An absent key is as much a topology mismatch as a wrong
+            # value — .get(k, want) would silently accept a checkpoint
+            # written before the field existed.
+            if k not in meta:
+                raise ValueError(f"checkpoint meta has no {k!r} field "
+                                 f"(expected {k}={want}); it was written "
+                                 f"by an incompatible service version")
+            if meta[k] != want:
                 raise ValueError(f"checkpoint {k}={meta[k]} does not match "
                                  f"this service's {k}={want}")
 
@@ -243,18 +263,23 @@ class ReplayService:
         cfg = self.cfg
         start = 0
         state = None
+        marks = None       # replay watermarks of the last on-disk save
         if manager is not None:
             step, snap, meta = self._restore(manager, self._sync_target(),
                                              "sync", n_steps=n_steps)
             if step is not None:
                 key = jax.random.wrap_key_data(snap["key_data"])
                 state, start = snap["state"], int(meta["step"])
+                # The restored state IS the manager's latest checkpoint,
+                # so the next save can be a delta against it.
+                marks = rck.replay_marks(state.buffer)
         if state is None:
             state = self.dqn.init(key)
         # Same step-key derivation as the scan trainer's _train.
         keys = jax.random.split(jax.random.fold_in(key, 1), n_steps)
         returns = []
         preempted_at = None
+        prev_save_t = start
         t0 = time.perf_counter()
         t_first_learn = None
         t_end = start
@@ -267,11 +292,16 @@ class ReplayService:
             t_end = t + 1
             if manager is not None and (manager.should_save(t + 1)
                                         or t + 1 == n_steps):
+                dirty = (self._sync_dirty(state, marks, prev_save_t, t + 1)
+                         if marks is not None else None)
                 manager.save(t + 1,
                              {"key_data": jax.random.key_data(key),
                               "state": state},
                              meta={"mode": "sync", "step": t + 1,
-                                   "n_steps": n_steps})
+                                   "n_steps": n_steps},
+                             dirty=dirty)
+                marks = rck.replay_marks(state.buffer)
+                prev_save_t = t + 1
                 if manager.preempted and t + 1 < n_steps:
                     preempted_at = t + 1
                     break
@@ -305,6 +335,43 @@ class ReplayService:
                          target_params=state.target_params,
                          buffer=state.buffer, metrics=metrics)
 
+    def _sync_dirty(self, state, marks: dict, t0: int, t1: int):
+        """Dirty tree for the sync snapshot covering steps ``[t0, t1)``.
+
+        The scan step's scheduling is structural — step t learns iff
+        ``t >= learn_start and t % train_every == 0`` and target-syncs
+        iff ``t % target_sync == 0`` — so whether params / optimizer
+        moments / target / priority tables changed in the window is
+        decidable host-side without reading a single array.  Storage and
+        write stamps are dirty exactly on the ring arc the window's adds
+        wrote; priority tables are arc-only when no learning happened
+        and full otherwise (the sampled rows live inside the jit).
+        Everything small (scalars, env state, episode accounting) is
+        always saved.
+        """
+        cfg = self.cfg
+        learned = any(t >= cfg.learn_start and t % cfg.train_every == 0
+                      for t in range(t0, t1))
+        synced = any(t % cfg.target_sync == 0 for t in range(t0, t1))
+        # The non-buffer part of the dirty tree depends only on the two
+        # predicates (the state's structure is fixed for the run), so
+        # cache it — rebuilding ~6 tree maps per save is measurable at
+        # the benchmark's save cadence.
+        tpl = self._sync_dirty_tpl.get((learned, synced))
+        if tpl is None:
+            tpl = jax.tree.map(lambda _: True, state)._replace(
+                params=ckpt_mod.dirty_like(state.params, learned),
+                target_params=ckpt_mod.dirty_like(state.target_params,
+                                                  synced),
+                opt_m=ckpt_mod.dirty_like(state.opt_m, learned),
+                opt_v=ckpt_mod.dirty_like(state.opt_v, learned))
+            self._sync_dirty_tpl[(learned, synced)] = tpl
+        bd = rck.replay_dirty(self.dqn.replay, state.buffer, marks)
+        if learned:
+            bd = bd._replace(sampler_state=ckpt_mod.dirty_like(
+                state.buffer.sampler_state, True))
+        return {"key_data": True, "state": tpl._replace(buffer=bd)}
+
     # --- asynchronous mode -------------------------------------------- #
 
     def _run_async(self, key: jax.Array, n_steps: int,
@@ -314,6 +381,7 @@ class ReplayService:
         start_steps, prefetch_draw, frames0, blocks0 = 0, 0, 0, 0
         actor_resume = None
         snap = None
+        resume_marks = None
         if manager is not None:
             step, snap, meta = self._restore(manager, self._async_target(),
                                              "async",
@@ -332,19 +400,23 @@ class ReplayService:
             params0, target0 = snap["params"], snap["target_params"]
             opt_m0, opt_v0 = snap["opt_m"], snap["opt_v"]
             self._bstate = snap["buffer"]
+            # The restored buffer IS the manager's latest on-disk state:
+            # the first snapshot of this run can be a delta against it.
+            # fb_applied is 0 in THIS run's counter space (fresh log).
+            resume_marks = {"pos": int(self._bstate.pos),
+                            "total_adds": int(self._bstate.total_adds),
+                            "fb_applied": 0}
         else:
             state0 = self.dqn.init(key)
             params0, target0 = state0.params, state0.target_params
             opt_m0, opt_v0 = state0.opt_m, state0.opt_v
             self._bstate = state0.buffer          # canonical replay state
-        chunks_base = sum(a["chunk"] for a in actor_resume) \
-            if actor_resume else 0
         params_box = [params0]                # actors read, learner swaps
         work_q: queue.Queue = queue.Queue(self.queue_size)
         self._work_q = work_q
         batch_q: queue.Queue = queue.Queue(self.prefetch_depth)
         stop = threading.Event()
-        gate = PauseGate()
+        self._fb_rows = collections.deque() if manager is not None else None
         # Running aggregates, bounded regardless of run length; the exact
         # per-batch sequence trace is opt-in via feedback_log.
         rec = {"frames": 0, "blocks": 0,
@@ -352,7 +424,9 @@ class ReplayService:
                "feedback_seqs": [] if self.feedback_log else None,
                "stale_n": 0, "stale_sum": 0, "stale_max": 0,
                "returns": collections.deque(maxlen=256),
-               "depth_n": 0, "work_sum": 0, "batch_sum": 0, "error": None}
+               "depth_n": 0, "work_sum": 0, "batch_sum": 0, "error": None,
+               "snapshots": 0, "snap_pause_us_sum": 0.0,
+               "snap_pause_us_max": 0.0}
 
         def feedback_put(fb):
             ok = put_with_stop(work_q, ("feedback", fb), stop)
@@ -361,10 +435,13 @@ class ReplayService:
             return ok
 
         last_saved = [start_steps]
+        snapper: _CowSnapshotter | None = None
 
         def on_slab(params, target_params, opt_m, opt_v):
-            """Checkpoint hook, on the learner (caller) thread.  Returns
-            True to stop the learner early (preemption)."""
+            """Checkpoint hook, on the learner (caller) thread.  O(µs):
+            the snapshotter only grabs references and counters here; the
+            serialization runs on its own thread.  Returns True to stop
+            the learner early (preemption)."""
             if manager is None:
                 return False
             steps = learner.steps_done
@@ -372,10 +449,8 @@ class ReplayService:
             due = steps - last_saved[0] >= manager.save_interval
             if not (preempt or due):
                 return False
-            if steps != last_saved[0] and self._snapshot(
-                    manager, steps, params, target_params, opt_m, opt_v,
-                    key, pool, prefetch, gate, stop, rec, chunks_base,
-                    frames0, blocks0):
+            if steps != last_saved[0] and snapper.capture(
+                    steps, params, target_params, opt_m, opt_v):
                 last_saved[0] = steps
             return preempt and steps < n_steps
 
@@ -395,25 +470,31 @@ class ReplayService:
                 return (frames0 + rec["frames"]
                         < head + ratio * max(learner.steps_done, 1))
 
+        # No PauseGate: snapshots are copy-on-write, nothing ever parks.
         pool = ActorPool(
             self.dqn, self._rollout, num_actors=self.num_actors,
             params_fn=lambda: params_box[0], out_q=work_q, stop=stop,
             base_key=key, chunk_len=self.chunk_len, budget_fn=budget_fn,
-            gate=gate, resume_states=actor_resume)
+            resume_states=actor_resume)
         prefetch = PrefetchPipeline(
             self._sample,
             state_fn=lambda: (self._bstate, learner.steps_done),
             out_q=batch_q, stop=stop, base_key=key, slab=self.slab,
             min_size=self.min_size, device=self.device,
-            beta_fn=self.dqn.beta_at, gate=gate,
+            beta_fn=self.dqn.beta_at,
             start_draw=prefetch_draw, start_seq=start_steps)
+        if manager is not None:
+            snapper = _CowSnapshotter(self, manager, pool, prefetch, key,
+                                      rec, frames0, blocks0,
+                                      resume_marks=resume_marks)
 
         def shutdown():
             stop.set()
-            gate.resume()  # release anything parked at the gate
             pool.join(timeout=10.0)
             prefetch.join(timeout=10.0)
             replay_thread.join(timeout=10.0)
+            if snapper is not None:
+                snapper.drain()  # finish any in-flight snapshot write
 
         def raise_worker_errors():
             if rec["error"] is not None:
@@ -421,6 +502,9 @@ class ReplayService:
             if prefetch.error is not None:
                 raise RuntimeError(
                     "prefetch pipeline failed") from prefetch.error
+            if snapper is not None and snapper.error is not None:
+                raise RuntimeError(
+                    "snapshot writer failed") from snapper.error
             pool.raise_errors()
 
         t0 = time.perf_counter()
@@ -468,7 +552,9 @@ class ReplayService:
             "wall_time": wall,
             "frames": rec["frames"],
             "total_frames": frames0 + rec["frames"],
-            "frames_per_sec": rec["frames"] / wall,
+            # Same zero-wall guard as the sync path: a run that resumes
+            # at its target does zero work in epsilon time.
+            "frames_per_sec": rec["frames"] / max(wall, 1e-9),
             "blocks": rec["blocks"],
             "return_mean": (float(returns[-64:].mean())
                             if returns.size else 0.0),
@@ -495,57 +581,37 @@ class ReplayService:
             "losses": [float(l) for l in learner.losses],
             "resumed_from": start_steps if start_steps else None,
             "preempted_at": preempted_at,
+            # COW snapshot accounting: "pause" is the learner-thread
+            # capture cost (reference grab + watermark reads), the only
+            # stall a snapshot inflicts on the pipeline.  drain_cycles
+            # is the number of full pause→drain quiesce protocols run —
+            # structurally zero since the COW rework, kept as a column
+            # so the benchmark trajectory records the regime change.
+            "snapshot": {
+                "count": rec["snapshots"],
+                "saved": snapper.saved if snapper is not None else 0,
+                "pause_us_mean": (rec["snap_pause_us_sum"]
+                                  / max(rec["snapshots"], 1)),
+                "pause_us_max": rec["snap_pause_us_max"],
+                "drain_cycles": 0,
+            },
         }
         return RunResult(params=params, target_params=target_params,
                          buffer=self._bstate, metrics=metrics)
 
     # --- snapshot protocol -------------------------------------------- #
 
-    def _snapshot(self, manager, steps, params, target_params, opt_m,
-                  opt_v, key, pool, prefetch, gate, stop, rec,
-                  chunks_base, frames0, blocks0,
-                  timeout: float = 60.0) -> bool:
-        """pause → drain → snapshot → resume (on the learner thread).
+    def _async_dirty(self, bstate, snap: dict, marks: dict, rows):
+        """Dirty tree for an async snapshot relative to ``marks``.
 
-        1. **pause**: the actor pool and the prefetcher park at the gate
-           at their next loop boundary (any in-flight queue put finishes
-           first; the replay thread never parks, so those puts drain).
-        2. **drain**: wait until the replay thread has applied every
-           enqueued transition block (``pool.chunks_done`` of them) and
-           every deferred priority-feedback slab the learner has emitted
-           — the canonical buffer state then reflects all experience
-           generated and all TD errors computed so far.
-        3. **snapshot**: write the quiescent state atomically; per-thread
-           PRNG stream positions are the actor chunk counters and the
-           prefetcher draw counter (keys are pure fold_ins of those).
-        4. **resume**: release the gate.
+        The buffer gets the exact ring-arc + touched-priority-row set;
+        every other component (params, optimizer moments, actor states,
+        the key) changes every slab or is tiny — always full.
         """
-        gate.pause()
-        try:
-            if not gate.wait_parked(self.num_actors + 1, stop, timeout):
-                return False  # stopping anyway; skip the snapshot
-            deadline = time.monotonic() + timeout
-            while not stop.is_set():
-                drained = (rec["blocks"] == pool.chunks_done - chunks_base
-                           and rec["fb_applied"] == rec["fb_enqueued"]
-                           and self._work_q.empty())
-                if drained:
-                    break
-                if time.monotonic() > deadline:
-                    raise RuntimeError(
-                        "snapshot drain did not quiesce within "
-                        f"{timeout}s (blocks {rec['blocks']}/"
-                        f"{pool.chunks_done - chunks_base}, feedback "
-                        f"{rec['fb_applied']}/{rec['fb_enqueued']})")
-                time.sleep(0.002)
-            if stop.is_set():
-                return False
-            self._save_snapshot(manager, steps, params, target_params,
-                                opt_m, opt_v, key, pool, prefetch, rec,
-                                frames0, blocks0)
-            return True
-        finally:
-            gate.resume()
+        bd = rck.replay_dirty(self.dqn.replay, bstate, marks,
+                              priority_rows=rows)
+        return {k: (bd if k == "buffer" else ckpt_mod.dirty_like(v, True))
+                for k, v in snap.items()}
 
     def _save_snapshot(self, manager, steps, params, target_params,
                        opt_m, opt_v, key, pool, prefetch, rec,
@@ -571,8 +637,10 @@ class ReplayService:
                      rec: dict) -> None:
         """The one owner of the canonical replay state: applies transition
         blocks and deferred priority feedback in arrival order, publishes
-        immutable snapshots for the prefetcher.  Never parks at the pause
-        gate — during a snapshot it is the thread doing the draining."""
+        immutable snapshots for the prefetcher.  Each publish REPLACES
+        ``self._bstate`` with a fresh pytree (never mutates), which is
+        what lets the COW snapshotter treat any captured reference as a
+        consistent checkpoint without pausing this thread."""
         try:
             bstate = self._bstate
             while True:
@@ -596,6 +664,17 @@ class ReplayService:
                     rec["returns"].extend(item.completed_returns.tolist())
                 else:  # deferred priority feedback (one slab, S batches)
                     fb: Feedback = item
+                    if self._fb_rows is not None:
+                        # Dirty-row log for incremental snapshots: append
+                        # BEFORE the apply/publish (host copy — fb.idx is
+                        # donated to the apply below), so any feedback
+                        # visible in a captured state has its rows in the
+                        # log and the COW dirty set is a superset, never
+                        # an under-count.  Stale (stamp-dropped) rows get
+                        # logged too; marking them dirty just re-writes
+                        # identical bytes.
+                        self._fb_rows.append(
+                            (rec["fb_applied"], np.asarray(fb.idx).ravel()))
                     bstate = self._apply_feedback(
                         bstate, fb.idx, fb.td, fb.stamp)
                     self._bstate = bstate
@@ -614,3 +693,147 @@ class ReplayService:
         except BaseException as e:
             rec["error"] = e
             stop.set()
+
+
+class _CowSnapshotter:
+    """Copy-on-write checkpoint writer for the async runtime.
+
+    The learner-thread half (:meth:`capture`) grabs immutable pytree
+    references and host counter watermarks — no pause gate, no drain.
+    The replay thread publishes every new canonical state as a *fresh*
+    pytree, so a captured reference is a consistent snapshot by
+    construction; a dedicated worker thread serializes it to disk while
+    actors, prefetcher, learner and replay thread keep running.
+
+    Consistency contract:
+
+    * **state ⊇ counters.**  Capture reads the applied-feedback counter
+      BEFORE the state reference, and the replay thread publishes state
+      BEFORE bumping the counter — so the dirty rows computed from the
+      previous save's counter watermark are a *superset* of what changed
+      between the two states; a superset only re-writes identical bytes.
+    * **in-flight work is absent, not torn.**  Blocks and feedback slabs
+      still in queues at capture are simply not in the snapshot.  On
+      resume the stamped exactly-once feedback contract (PR 3) makes the
+      missing applies safe: priorities are one slab staler, which async
+      resume tolerates by contract (``tests/test_resume.py`` pins the
+      sequence-gaplessness of the resumed run, not frame identity).
+    * **one save in flight.**  ``capture`` skips (returns False) while
+      the worker is still writing, so manager chain bookkeeping and the
+      marks/row-log pruning are strictly serialized.
+    """
+
+    def __init__(self, service: ReplayService, manager, pool, prefetch,
+                 key, rec: dict, frames0: int, blocks0: int,
+                 resume_marks: dict | None = None):
+        self._svc = service
+        self._manager = manager
+        self._pool = pool
+        self._prefetch = prefetch
+        self._key = key
+        self._rec = rec
+        self._frames0 = frames0
+        self._blocks0 = blocks0
+        # Watermarks of the last successful on-disk save (None -> the
+        # next save is full).  Only the worker thread writes this after
+        # construction.
+        self.marks = resume_marks
+        self.saved = 0
+        self.error: BaseException | None = None
+        # The run key never changes — materialize its raw data once so
+        # capture() does not dispatch a jax op per snapshot.
+        self._key_data = np.asarray(jax.random.key_data(key))
+        self._busy = threading.Event()
+        self._q: queue.Queue = queue.Queue(1)
+        self._thread = threading.Thread(target=self._worker,
+                                        name="replay-snapshot", daemon=True)
+        self._thread.start()
+
+    def capture(self, steps, params, target_params, opt_m, opt_v) -> bool:
+        """Learner-thread half: O(µs) reference grab — no device syncs,
+        no tree walks; the dirty-set computation and the ``int()`` reads
+        of the captured buffer's scalars happen on the worker thread
+        (the captured pytree is frozen, so they read the same values).
+        False = skipped (previous snapshot still writing, an error is
+        pending, or an actor has not published its first run state yet).
+        """
+        if self.error is not None or self._busy.is_set():
+            return False
+        run_states = self._pool.run_states()
+        if any(rs is None for rs in run_states):
+            return False
+        t0 = time.perf_counter()
+        rec = self._rec
+        a_now = rec["fb_applied"]      # read BEFORE the state reference
+        bstate = self._svc._bstate
+        snap = {"key_data": self._key_data,
+                "params": params, "target_params": target_params,
+                "opt_m": opt_m, "opt_v": opt_v, "buffer": bstate,
+                "actors": [{"env_state": rs["env_state"], "obs": rs["obs"],
+                            "ep_ret": rs["ep_ret"], "nstep": rs["nstep"]}
+                           for rs in run_states]}
+        meta = {"mode": "async", "learner_steps": int(steps),
+                "num_actors": self._svc.num_actors,
+                "prefetch_draw": int(self._prefetch.draws),
+                "frames": int(self._frames0 + rec["frames"]),
+                "blocks": int(self._blocks0 + rec["blocks"]),
+                "actor_steps": [int(rs["step"]) for rs in run_states],
+                "actor_chunks": [int(rs["chunk"]) for rs in run_states]}
+        # Pause accounting covers the capture work itself; the queue put
+        # below wakes the worker, whose overlapped serialization shows
+        # up in the benchmark's wall-overhead column, not here.
+        pause_us = (time.perf_counter() - t0) * 1e6
+        rec["snapshots"] += 1
+        rec["snap_pause_us_sum"] += pause_us
+        rec["snap_pause_us_max"] = max(rec["snap_pause_us_max"], pause_us)
+        self._busy.set()
+        self._q.put((int(steps), snap, meta, a_now))
+        return True
+
+    def _worker(self) -> None:
+        while True:
+            job = self._q.get()
+            if job is None:
+                return
+            steps, snap, meta, a_now = job
+            try:
+                bstate = snap["buffer"]
+                dirty = None
+                if self.marks is not None:
+                    # Reading the row log here (after capture) can only
+                    # see MORE entries than existed at capture — extra
+                    # rows widen the dirty set, which is always safe.
+                    a_base = self.marks["fb_applied"]
+                    rows = [r for seq, arr in list(self._svc._fb_rows)
+                            if seq >= a_base for r in arr]
+                    dirty = self._svc._async_dirty(bstate, snap,
+                                                   self.marks, rows)
+                next_marks = {"pos": int(bstate.pos),
+                              "total_adds": int(bstate.total_adds),
+                              "fb_applied": a_now}
+                self._manager.save(steps, snap, meta=meta, dirty=dirty)
+                self.marks = next_marks
+                self.saved += 1
+                # Entries older than the new watermark can never be
+                # dirty again — prune (popleft racing the replay
+                # thread's append is deque-safe).
+                log = self._svc._fb_rows
+                while log and log[0][0] < next_marks["fb_applied"]:
+                    log.popleft()
+            except BaseException as e:
+                self.error = e   # surfaced by raise_worker_errors
+            finally:
+                self._busy.clear()
+
+    def drain(self, timeout: float = 120.0) -> None:
+        """Wait out any in-flight save, then stop the worker thread.
+        After this returns the manager is safe to use from the caller
+        (the final quiescent save)."""
+        deadline = time.monotonic() + timeout
+        while self._busy.is_set() and time.monotonic() < deadline:
+            time.sleep(0.002)
+        try:
+            self._q.put_nowait(None)
+        except queue.Full:
+            pass
+        self._thread.join(timeout=10.0)

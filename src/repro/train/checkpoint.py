@@ -1,5 +1,5 @@
-"""Fault-tolerant checkpointing: atomic + durable saves, retention,
-validated elastic restore.
+"""Fault-tolerant checkpointing: atomic + durable saves, incremental
+delta chains, retention, validated elastic restore.
 
 Design (single-controller; the multi-host generalisation saves one shard
 file per process and an index, orbax-style — documented in DESIGN.md):
@@ -15,6 +15,15 @@ file per process and an index, orbax-style — documented in DESIGN.md):
   ``save(..., meta=...)`` embeds an arbitrary JSON-able dict in the
   manifest (counters, config fingerprints); ``load_meta`` reads it back
   without touching the arrays.
+* ``save_incremental`` writes a single ``step_<n>.ckpt`` file (manifest
+  embedded in the npz) holding only the leaves — and, for ring-style
+  arrays, only the leading-dim row ranges — that changed since
+  ``base_step``.  Each delta names its base in the manifest, forming a
+  chain that ``restore`` replays transparently; with ``base_step=None``
+  the same single-file container is a self-contained full checkpoint.
+  One payload file means two fsyncs per save instead of four, which is
+  what makes per-interval checkpointing cheap enough for the replay
+  service's production cadence (see benchmarks/bench_replay.py).
 * ``restore`` validates the manifest's leaf names and dtypes against the
   target tree and fails with a readable diff — leaves are never matched
   by position alone, so restoring a checkpoint into the wrong structure
@@ -23,11 +32,14 @@ file per process and an index, orbax-style — documented in DESIGN.md):
 * ``restore`` device_puts each leaf with the *target* sharding: restoring
   onto a different mesh (elastic rescale 256 -> 512 chips, or CPU debug)
   is just a different sharding argument — checkpoints are mesh-agnostic.
-* ``CheckpointManager`` keeps the newest ``keep`` checkpoints, resumes
-  from the latest valid one, garbage-collects ``step_*.tmp`` litter from
-  crashed saves, and exposes a preemption flag that a SIGTERM hook sets
-  when installable (main thread) and that worker threads reach through
-  ``request_preemption()`` or the polled ``PREEMPT`` sentinel file.
+* ``CheckpointManager`` keeps the newest ``keep`` checkpoints (plus any
+  older checkpoints a retained delta chain still depends on), resumes
+  from the latest valid one, compacts delta chains with a periodic full
+  save every ``full_every`` saves, garbage-collects ``step_*.tmp``
+  litter from crashed saves, and exposes a preemption flag that a
+  SIGTERM hook sets when installable (main thread) and that worker
+  threads reach through ``request_preemption()`` or the polled
+  ``PREEMPT`` sentinel file.
 """
 from __future__ import annotations
 
@@ -67,12 +79,65 @@ def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
     return arr
 
 
+def _path_key_str(k: Any) -> str:
+    """Normalize every pytree key type to its bare component string.
+
+    DictKey/FlattenedIndexKey carry ``.key``, SequenceKey ``.idx``,
+    GetAttrKey ``.name`` — falling through to ``str(k)`` renders
+    attr-keyed nodes (NamedTuples, registered dataclasses) with a
+    leading dot (``.params``), which made manifest names depend on the
+    container kind instead of the field name.
+    """
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k)
+
+
 def _flatten_with_names(tree: Any):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
-                      for k in path) for path, _ in flat]
+    names = ["/".join(_path_key_str(k) for k in path) for path, _ in flat]
     leaves = [leaf for _, leaf in flat]
     return names, leaves, treedef
+
+
+class Rows:
+    """Dirty spec for one leaf: the leading-dim row ranges that changed.
+
+    ``ranges`` is a list of half-open ``(start, stop)`` pairs — a ring
+    arc that wraps the capacity boundary is two ranges.  Used as a leaf
+    value inside a dirty tree (see :func:`save_incremental`); the other
+    two spec values are plain bools (True = whole leaf, False = skip).
+    """
+
+    __slots__ = ("ranges",)
+
+    def __init__(self, ranges):
+        self.ranges = [(int(s), int(e)) for s, e in ranges]
+
+    def __repr__(self):
+        return f"Rows({self.ranges!r})"
+
+
+def dirty_like(tree: Any, flag: Any = True) -> Any:
+    """A dirty tree marking every leaf of ``tree`` with ``flag``."""
+    return jax.tree.map(lambda _: flag, tree)
+
+
+def _normalize_ranges(ranges, n_rows: int):
+    """Sorted, merged, bounds-checked half-open ranges over [0, n_rows)."""
+    out = []
+    for s, e in sorted((int(s), int(e)) for s, e in ranges):
+        if s < 0 or e > n_rows:
+            raise ValueError(
+                f"dirty range ({s}, {e}) outside leading dim {n_rows}")
+        if e <= s:
+            continue
+        if out and s <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], e))
+        else:
+            out.append((s, e))
+    return out
 
 
 def _fsync_file(path: str) -> None:
@@ -152,6 +217,117 @@ def save(directory: str, step: int, tree: Any,
     return final
 
 
+def _file_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:010d}.ckpt")
+
+
+def _dir_path(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:010d}")
+
+
+def checkpoint_exists(directory: str, step: int) -> bool:
+    return (os.path.exists(_file_path(directory, step))
+            or os.path.exists(os.path.join(_dir_path(directory, step),
+                                           "manifest.json")))
+
+
+def save_incremental(directory: str, step: int, tree: Any,
+                     base_step: int | None = None, dirty: Any = None,
+                     meta: dict | None = None) -> str:
+    """Single-file durable save of the leaves changed since ``base_step``.
+
+    ``dirty`` is a pytree with the same structure as ``tree`` whose
+    leaves are dirty specs: ``True`` (save the whole leaf), ``False``
+    (unchanged since the base — skip), or a :class:`Rows` of leading-dim
+    row ranges (ring arcs / touched priority rows; only those slices are
+    written).  Build it with :func:`dirty_like` + ``Rows`` so the
+    structures stay aligned.  With ``base_step=None`` (and ``dirty``
+    omitted) every leaf is saved — the same container then holds a
+    self-contained full checkpoint, which is also the fast path the
+    manager uses for compaction.
+
+    The whole checkpoint (manifest included) is ONE ``step_<n>.ckpt``
+    npz, fsync'd and atomically renamed: two fsyncs per save instead of
+    the directory layout's four.  The manifest records ``base_step`` and
+    the per-leaf delta spec; :func:`restore` replays the chain.
+    """
+    os.makedirs(directory, exist_ok=True)
+    if base_step is None and dirty is not None:
+        raise ValueError("dirty spec without a base_step: an incremental "
+                         "save needs the base it is relative to")
+    if base_step is not None:
+        if base_step >= step:
+            raise ValueError(f"base_step {base_step} must precede step {step}")
+        if not checkpoint_exists(directory, base_step):
+            raise ValueError(f"incremental save at step {step}: base step "
+                             f"{base_step} not found in {directory}")
+    names, leaves, _ = _flatten_with_names(tree)
+    if dirty is None:
+        dleaves = [True] * len(leaves)
+    else:
+        dleaves = jax.tree_util.tree_flatten(
+            dirty, is_leaf=lambda x: isinstance(x, (bool, Rows)))[0]
+        if len(dleaves) != len(leaves):
+            raise ValueError(
+                f"dirty tree has {len(dleaves)} leaves, tree has "
+                f"{len(leaves)}; build it with dirty_like(subtree, flag) "
+                f"so the structures align")
+    arrays, spec, dtypes, shapes = {}, [], [], []
+    for i, (leaf, d) in enumerate(zip(leaves, dleaves)):
+        # Manifest dtype/shape come from metadata alone — a skipped leaf
+        # must cost zero device->host transfer, and a Rows leaf only the
+        # transfer of its arc slices (this, not the npz write, dominates
+        # the steady-state delta save for large ring buffers).
+        dtypes.append(_leaf_dtype_name(leaf))
+        shape = list(np.shape(leaf))
+        shapes.append(shape)
+        if d is False:
+            spec.append(None)
+            continue
+        if d is True:
+            spec.append(True)
+            arrays[f"d{i}"] = _to_storable(_leaf_storable(leaf))
+            continue
+        if not isinstance(d, Rows):
+            raise ValueError(f"dirty leaf {names[i]}: expected bool or "
+                             f"Rows, got {type(d).__name__}")
+        if not shape:
+            raise ValueError(f"dirty leaf {names[i]}: Rows spec on a "
+                             f"rank-0 leaf")
+        ranges = _normalize_ranges(d.ranges, shape[0])
+        if not ranges:
+            spec.append(None)
+            continue
+        spec.append([[s, e] for s, e in ranges])
+        # One whole-leaf transfer, sliced host-side: slicing the device
+        # array instead (leaf[s:e]) dispatches an XLA slice that
+        # recompiles for every distinct arc geometry, which costs far
+        # more than the extra bytes on the wire.
+        stored = _to_storable(_leaf_storable(leaf))
+        arrays[f"d{i}"] = np.concatenate(
+            [stored[s:e] for s, e in ranges], axis=0)
+    manifest = {"step": step, "names": names, "dtypes": dtypes,
+                "shapes": shapes, "delta": spec}
+    if base_step is not None:
+        manifest["base_step"] = base_step
+    if meta is not None:
+        manifest["meta"] = meta
+    arrays["__manifest__"] = np.frombuffer(
+        json.dumps(manifest).encode("utf-8"), np.uint8)
+    final = _file_path(directory, step)
+    if os.path.exists(_dir_path(directory, step)):
+        raise ValueError(f"step {step} already exists as a directory "
+                         f"checkpoint; refusing to shadow it with a file")
+    tmp = final + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)
+    _fsync_dir(directory)
+    return final
+
+
 def available_steps(directory: str) -> list[int]:
     if not os.path.isdir(directory):
         return []
@@ -160,29 +336,45 @@ def available_steps(directory: str) -> list[int]:
         m = re.fullmatch(r"step_(\d+)", d)
         if m and os.path.exists(os.path.join(directory, d, "manifest.json")):
             out.append(int(m.group(1)))
-    return sorted(out)
+            continue
+        m = re.fullmatch(r"step_(\d+)\.ckpt", d)
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(set(out))
 
 
 def gc_stale_tmp(directory: str) -> list[str]:
     """Remove ``step_*.tmp`` litter left behind by crashed saves.
 
-    Only call when no save is concurrently in flight in this directory
-    (the manager calls it at construction and right after each completed
-    save). Returns the removed paths.
+    Covers both layouts: ``step_<n>.tmp/`` directories from the full
+    dir-layout save and ``step_<n>.ckpt.tmp`` files from single-file
+    saves.  Only call when no save is concurrently in flight in this
+    directory (the manager calls it at construction and right after each
+    completed save). Returns the removed paths.
     """
     if not os.path.isdir(directory):
         return []
     removed = []
     for d in os.listdir(directory):
+        path = os.path.join(directory, d)
         if re.fullmatch(r"step_\d+\.tmp", d):
-            path = os.path.join(directory, d)
             shutil.rmtree(path, ignore_errors=True)
             removed.append(path)
+        elif re.fullmatch(r"step_\d+\.ckpt\.tmp", d):
+            try:
+                os.unlink(path)
+                removed.append(path)
+            except OSError:
+                pass
     return removed
 
 
 def load_manifest(directory: str, step: int) -> dict:
-    path = os.path.join(directory, f"step_{step:010d}", "manifest.json")
+    file_path = _file_path(directory, step)
+    if os.path.exists(file_path):
+        with np.load(file_path) as data:
+            return json.loads(data["__manifest__"].tobytes().decode("utf-8"))
+    path = os.path.join(_dir_path(directory, step), "manifest.json")
     with open(path) as f:
         return json.load(f)
 
@@ -232,9 +424,92 @@ def _validate_manifest(manifest: dict, names: list[str],
             + "\n".join(mismatches))
 
 
+def _read_arrays(directory: str, step: int):
+    """(manifest, {array_key: ndarray}) for either on-disk layout."""
+    file_path = _file_path(directory, step)
+    if os.path.exists(file_path):
+        with np.load(file_path) as data:
+            manifest = json.loads(
+                data["__manifest__"].tobytes().decode("utf-8"))
+            arrays = {k: data[k] for k in data.files if k != "__manifest__"}
+        return manifest, arrays
+    path = _dir_path(directory, step)
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        arrays = {k: data[k] for k in data.files}
+    return manifest, arrays
+
+
+def _materialize(directory: str, step: int):
+    """Replay the delta chain ending at ``step``.
+
+    Returns ``(final_manifest, leaves)`` with leaves in storable form
+    (dtype views not yet restored).  Walks ``base_step`` links back to a
+    full checkpoint (single-file full or legacy dir layout), then applies
+    each delta oldest → newest: ``True`` specs replace the leaf, range
+    specs copy-and-overwrite the named leading-dim slices, ``None`` specs
+    leave the base leaf untouched.
+    """
+    chain = []
+    seen: set[int] = set()
+    s = step
+    while True:
+        if s in seen:
+            raise ValueError(f"delta chain at step {step} cycles on "
+                             f"step {s} in {directory}")
+        seen.add(s)
+        manifest, arrays = _read_arrays(directory, s)
+        chain.append((s, manifest, arrays))
+        base = manifest.get("base_step")
+        if base is None:
+            break
+        s = base
+    chain.reverse()
+    leaves = None
+    names = None
+    for s, manifest, arrays in chain:
+        spec = manifest.get("delta")
+        if leaves is None:
+            if spec is None:  # legacy dir layout: full a{i} arrays
+                leaves = [arrays[f"a{i}"]
+                          for i in range(len(manifest["names"]))]
+            else:
+                if any(sp is not True for sp in spec):
+                    raise ValueError(
+                        f"delta chain root at step {s} is itself "
+                        f"incremental — the chain has no full base")
+                leaves = [arrays[f"d{i}"] for i in range(len(spec))]
+            names = manifest["names"]
+            continue
+        if manifest["names"] != names:
+            raise ValueError(
+                f"delta at step {s} was saved against a different tree "
+                f"structure than its chain base (leaf names differ)")
+        for i, sp in enumerate(spec):
+            if sp is None:
+                continue
+            if sp is True:
+                leaves[i] = arrays[f"d{i}"]
+                continue
+            dst = np.array(leaves[i])
+            src = arrays[f"d{i}"]
+            off = 0
+            for rs, rng_e in sp:
+                n = rng_e - rs
+                dst[rs:rng_e] = src[off:off + n]
+                off += n
+            leaves[i] = dst
+    return chain[-1][1], leaves
+
+
 def restore(directory: str, step: int, target: Any,
             shardings: Any = None) -> Any:
     """Load into the structure of ``target`` (arrays or ShapeDtypeStructs).
+
+    Handles both layouts transparently: a legacy full directory
+    checkpoint loads directly, a single-file incremental checkpoint has
+    its delta chain replayed back to the nearest full save first.
 
     The manifest's leaf names and dtypes are validated against ``target``
     first — a structural mismatch raises with a readable diff instead of
@@ -245,12 +520,12 @@ def restore(directory: str, step: int, target: Any,
     sharding, so a table saved on 8 shards restores onto 2, or onto one
     CPU device, unchanged).
     """
-    path = os.path.join(directory, f"step_{step:010d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    with np.load(os.path.join(path, "arrays.npz")) as data:
-        arrays = [_from_storable(data[f"a{i}"], manifest["dtypes"][i])
-                  for i in range(len(data.files))]
+    path = _file_path(directory, step)
+    if not os.path.exists(path):
+        path = _dir_path(directory, step)
+    manifest, raw = _materialize(directory, step)
+    arrays = [_from_storable(a, manifest["dtypes"][i])
+              for i, a in enumerate(raw)]
     names, leaves, treedef = _flatten_with_names(target)
     if len(arrays) != len(leaves):
         raise ValueError(f"checkpoint has {len(arrays)} leaves, "
@@ -296,16 +571,57 @@ class CheckpointManager:
     """
 
     def __init__(self, directory: str, keep: int = 3,
-                 save_interval: int = 100):
+                 save_interval: int = 100, full_every: int = 8):
+        if keep < 1:
+            raise ValueError(f"keep must be >= 1, got {keep} (keep=0 would "
+                             f"leave nothing to resume from)")
+        if save_interval < 1:
+            raise ValueError(f"save_interval must be >= 1, got "
+                             f"{save_interval}")
+        if full_every < 1:
+            raise ValueError(f"full_every must be >= 1, got {full_every}")
         self.directory = directory
         self.keep = keep
         self.save_interval = save_interval
+        self.full_every = full_every
         self._preempted = False
+        # step -> base_step links, so the per-save GC's chain walk does
+        # not re-open on-disk manifests (an npz read per retained step
+        # per save); misses fall back to load_manifest.
+        self._bases: dict[int, Optional[int]] = {}
         gc_stale_tmp(directory)
+        # Resume the delta chain: the next dirty-aware save extends from
+        # the latest on-disk step unless the chain is already full_every
+        # deltas deep.
+        steps = available_steps(directory)
+        self._last_step: Optional[int] = steps[-1] if steps else None
+        self._chain_len = (self._chain_len_of(self._last_step)
+                           if self._last_step is not None else 0)
         try:
             os.unlink(self._sentinel_path)  # consume a stale sentinel
         except OSError:
             pass
+
+    def _base_of(self, step: int) -> Optional[int]:
+        if step in self._bases:
+            return self._bases[step]
+        try:
+            base = load_manifest(self.directory, step).get("base_step")
+        except (OSError, KeyError, ValueError):
+            base = None
+        self._bases[step] = base
+        return base
+
+    def _chain_len_of(self, step: int) -> int:
+        n, s, seen = 0, step, set()
+        while s is not None and s not in seen:
+            seen.add(s)
+            base = self._base_of(s)
+            if base is None:
+                break
+            n += 1
+            s = base
+        return n
 
     def install_preemption_hook(self, signum: int = signal.SIGTERM) -> bool:
         """Install the SIGTERM handler if possible; returns whether it was.
@@ -343,8 +659,31 @@ class CheckpointManager:
     def should_save(self, step: int) -> bool:
         return self.preempted or (step > 0 and step % self.save_interval == 0)
 
-    def save(self, step: int, tree: Any, meta: dict | None = None) -> str:
-        path = save(self.directory, step, tree, meta=meta)
+    def save(self, step: int, tree: Any, meta: dict | None = None,
+             dirty: Any = None, force_full: bool = False) -> str:
+        """Single-file save; incremental when a dirty spec is given.
+
+        With ``dirty=None`` (or no usable base) this writes a full
+        self-contained ``step_<n>.ckpt``.  With a dirty tree it writes a
+        delta against the previous save, compacting with a full save
+        every ``full_every`` saves so restore never replays an unbounded
+        chain.
+        """
+        base = self._last_step
+        full = (force_full or dirty is None or base is None
+                or base >= step
+                or self._chain_len >= self.full_every - 1
+                or not checkpoint_exists(self.directory, base))
+        if full:
+            path = save_incremental(self.directory, step, tree, meta=meta)
+            self._chain_len = 0
+            self._bases[step] = None
+        else:
+            path = save_incremental(self.directory, step, tree,
+                                    base_step=base, dirty=dirty, meta=meta)
+            self._chain_len += 1
+            self._bases[step] = base
+        self._last_step = step
         self._gc()
         return path
 
@@ -365,6 +704,25 @@ class CheckpointManager:
     def _gc(self):
         gc_stale_tmp(self.directory)
         steps = available_steps(self.directory)
-        for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.directory, f"step_{s:010d}"),
-                          ignore_errors=True)
+        # Not steps[:-keep]: that is the empty slice for keep=0 (deleting
+        # everything) and wraps negative when keep exceeds len(steps)
+        # (dropping steps that should be retained) — clamp explicitly.
+        retained = set(steps[max(len(steps) - self.keep, 0):])
+        # A retained delta is useless without its chain: retain every
+        # transitive base too.
+        frontier = list(retained)
+        while frontier:
+            s = frontier.pop()
+            base = self._base_of(s)
+            if base is not None and base not in retained:
+                retained.add(base)
+                frontier.append(base)
+        for s in steps:
+            if s in retained:
+                continue
+            shutil.rmtree(_dir_path(self.directory, s), ignore_errors=True)
+            try:
+                os.unlink(_file_path(self.directory, s))
+            except OSError:
+                pass
+            self._bases.pop(s, None)

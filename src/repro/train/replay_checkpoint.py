@@ -21,6 +21,15 @@ this module adds what the replay subsystem needs on top:
   shards restores onto 2 — or onto one CPU device — with
   membership-exact priorities (pinned in ``tests/test_replay_checkpoint``).
 
+* **Exact dirty sets for incremental saves.**  :func:`replay_marks`
+  captures the ring write position + global add counter at a snapshot;
+  :func:`replay_dirty` turns the next state plus those marks (and any
+  out-of-band priority-feedback rows) into the per-leaf dirty tree the
+  generic layer's ``save_incremental`` consumes — storage and stamps
+  dirty only on the written ring arc, priority tables on arc ∪ touched
+  rows — so steady-state checkpoints write KBs of delta instead of the
+  full dense dump.
+
 * **Whole-ReplayState save/restore** (:func:`save_replay` /
   :func:`restore_replay`) including the hidden exact-resume state the
   async runtime relies on: per-slot write stamps, the global add counter,
@@ -39,7 +48,60 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.core.replay_buffer import ReplayState, dirty_arcs, rows_to_ranges
 from repro.train import checkpoint as ck
+
+
+def replay_marks(state: Any) -> dict:
+    """Host watermarks of ``state`` identifying what a later delta save
+    must cover: the ring write position and the global add counter.
+    Capture at (or right after) each save; feed back to
+    :func:`replay_dirty` at the next one."""
+    return {"pos": int(state.pos), "total_adds": int(state.total_adds)}
+
+
+def replay_dirty(rb, state: Any, marks: dict,
+                 priority_rows=None) -> Any:
+    """Exact dirty tree for ``state`` relative to the ``marks`` snapshot.
+
+    * storage leaves and the write-stamp table are dirty exactly on the
+      ring arc written since ``marks`` (``total_adds`` delta starting at
+      the marked ``pos`` — two ranges when the arc wraps);
+    * capacity-dim sampler leaves (priority tables, AMPER pq/valid) are
+      dirty on that arc plus ``priority_rows`` (host iterable of slot
+      indices touched by out-of-band priority feedback since the base);
+    * sampler leaves without a capacity leading dim (e.g. a sum-tree's
+      internal nodes, static scalars) can't be row-tracked — always full;
+    * scalars (pos/size/max_priority/total_adds) and the n-step
+      accumulator window are tiny — always full.
+
+    The result flattens leaf-for-leaf against ``state`` and plugs
+    straight into ``checkpoint.save_incremental`` / the manager's
+    ``dirty=``.
+    """
+    capacity = rb.capacity
+    n_new = int(state.total_adds) - int(marks["total_adds"])
+    arcs = dirty_arcs(capacity, marks["pos"], n_new)
+    arc_spec: Any = ck.Rows(arcs) if arcs else False
+    prio_ranges = arcs + rows_to_ranges(priority_rows or [])
+    prio_spec: Any = ck.Rows(prio_ranges) if prio_ranges else False
+
+    def sampler_leaf(leaf):
+        shape = np.shape(leaf)
+        return (prio_spec if (len(shape) >= 1 and shape[0] == capacity)
+                else True)
+
+    return ReplayState(
+        storage=jax.tree.map(lambda _: arc_spec, state.storage),
+        sampler_state=jax.tree.map(sampler_leaf, state.sampler_state),
+        pos=True,
+        size=True,
+        max_priority=True,
+        write_stamp=arc_spec,
+        total_adds=True,
+        nstep=(None if state.nstep is None
+               else ck.dirty_like(state.nstep, True)),
+    )
 
 
 def replay_target(rb, example_transition: Any):

@@ -158,6 +158,227 @@ def test_preemption_sentinel_is_one_shot(tmp_path):
                                            ck.PREEMPT_SENTINEL))
 
 
+def sds(t):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.asarray(x).dtype), t)
+
+
+def assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+# ---------------------------------------------------------------- incremental
+
+
+def ring_tree():
+    """A tree shaped like replay state: a ring array + scalars."""
+    return {"ring": jnp.arange(32, dtype=jnp.float32).reshape(8, 4),
+            "prio": jnp.ones((8,), jnp.float32),
+            "pos": jnp.int32(0)}
+
+
+def test_incremental_full_is_self_contained(tmp_path):
+    t = tree()
+    ck.save_incremental(str(tmp_path), 4, t)
+    assert os.path.exists(tmp_path / "step_0000000004.ckpt")
+    out = ck.restore(str(tmp_path), 4, sds(t))
+    assert_trees_equal(t, out)
+    assert jax.tree.leaves(out)[-1].dtype == jnp.bfloat16
+
+
+def test_incremental_delta_chain_roundtrip(tmp_path):
+    d = str(tmp_path)
+    t = ring_tree()
+    ck.save_incremental(d, 1, t)
+    # delta 1: rows 2..5 of the ring rewritten, pos moved
+    t2 = {"ring": t["ring"].at[2:5].set(-1.0), "prio": t["prio"],
+          "pos": jnp.int32(5)}
+    dirty2 = {"ring": ck.Rows([(2, 5)]), "prio": False, "pos": True}
+    ck.save_incremental(d, 2, t2, base_step=1, dirty=dirty2)
+    # delta 2: a wrapping arc (rows 6..8 and 0..1) plus priority rows
+    t3 = {"ring": t2["ring"].at[6:].set(7.0).at[:1].set(9.0),
+          "prio": t2["prio"].at[3].set(0.5), "pos": jnp.int32(1)}
+    dirty3 = {"ring": ck.Rows([(6, 8), (0, 1)]),
+              "prio": ck.Rows([(3, 4)]), "pos": True}
+    ck.save_incremental(d, 3, t3, base_step=2, dirty=dirty3)
+    for step, want in ((1, t), (2, t2), (3, t3)):
+        assert_trees_equal(want, ck.restore(d, step, sds(t)))
+    # the deltas really are deltas: step 3 stores 3+1 ring rows, not 8
+    with np.load(os.path.join(d, "step_0000000003.ckpt")) as z:
+        stored = {k: z[k].shape for k in z.files if k != "__manifest__"}
+    names, _, _ = ck._flatten_with_names(t3)
+    ring_i = names.index("ring")
+    assert stored[f"d{ring_i}"] == (3, 4)
+
+
+def test_incremental_delta_over_legacy_dir_base(tmp_path):
+    """A single-file delta can chain onto a legacy dir-layout full save."""
+    d = str(tmp_path)
+    t = ring_tree()
+    ck.save(d, 1, t)  # dir layout
+    t2 = {"ring": t["ring"].at[0:2].set(3.0), "prio": t["prio"],
+          "pos": jnp.int32(2)}
+    ck.save_incremental(d, 2, t2, base_step=1,
+                        dirty={"ring": ck.Rows([(0, 2)]), "prio": False,
+                               "pos": True})
+    assert_trees_equal(t2, ck.restore(d, 2, sds(t)))
+
+
+def test_incremental_validation_errors(tmp_path):
+    d = str(tmp_path)
+    t = ring_tree()
+    with pytest.raises(ValueError, match="base_step"):
+        ck.save_incremental(d, 2, t, dirty=ck.dirty_like(t))
+    with pytest.raises(ValueError, match="not found"):
+        ck.save_incremental(d, 2, t, base_step=1, dirty=ck.dirty_like(t))
+    ck.save_incremental(d, 5, t)
+    with pytest.raises(ValueError, match="precede"):
+        ck.save_incremental(d, 5, t, base_step=5, dirty=ck.dirty_like(t))
+    with pytest.raises(ValueError, match="leaves"):
+        ck.save_incremental(d, 6, t, base_step=5,
+                            dirty={"ring": True, "pos": True})
+    with pytest.raises(ValueError, match="rank-0"):
+        ck.save_incremental(d, 6, t, base_step=5,
+                            dirty={"ring": True, "prio": True,
+                                   "pos": ck.Rows([(0, 1)])})
+    with pytest.raises(ValueError, match="outside"):
+        ck.save_incremental(d, 6, t, base_step=5,
+                            dirty={"ring": ck.Rows([(4, 99)]), "prio": True,
+                                   "pos": True})
+    ck.save(d, 7, t)  # dir layout at step 7
+    with pytest.raises(ValueError, match="shadow"):
+        ck.save_incremental(d, 7, t)
+
+
+def test_manager_constructor_validates(tmp_path):
+    with pytest.raises(ValueError, match="keep"):
+        ck.CheckpointManager(str(tmp_path), keep=0)
+    with pytest.raises(ValueError, match="save_interval"):
+        ck.CheckpointManager(str(tmp_path), save_interval=0)
+    with pytest.raises(ValueError, match="full_every"):
+        ck.CheckpointManager(str(tmp_path), full_every=0)
+
+
+def test_manager_delta_chain_compaction_and_gc(tmp_path):
+    """Dirty-aware saves chain deltas, compact every ``full_every``
+    saves, and GC retains the transitive bases a live chain needs."""
+    d = str(tmp_path)
+    mgr = ck.CheckpointManager(d, keep=2, save_interval=1, full_every=3)
+    t = ring_tree()
+    states = {}
+    for s in range(1, 8):
+        t = {"ring": t["ring"].at[s % 8].set(float(s)), "prio": t["prio"],
+             "pos": jnp.int32(s % 8)}
+        states[s] = t
+        mgr.save(s, t, dirty={"ring": ck.Rows([(s % 8, s % 8 + 1)]),
+                              "prio": False, "pos": True})
+    # compaction cadence: full at 1 (no base), 4, 7; deltas in between
+    for s, base in ((1, None), (2, 1), (3, 2), (4, None), (5, 4), (6, 5),
+                    (7, None)):
+        if s in ck.available_steps(d):
+            assert ck.load_manifest(d, s).get("base_step") == base, s
+    # keep=2 -> steps {6, 7} retained; 6 chains to 5 to 4 (retained as
+    # bases), the fully-compacted 1..3 chain is gone
+    steps = set(ck.available_steps(d))
+    assert {6, 7} <= steps
+    assert steps.isdisjoint({1, 2, 3})
+    assert {4, 5} <= steps  # step 6's chain
+    # every retained step restores to its exact saved state
+    for s in sorted(steps):
+        assert_trees_equal(states[s], ck.restore(d, s, sds(t)))
+
+
+def test_manager_resumes_chain_across_construction(tmp_path):
+    """A fresh manager continues the on-disk delta chain (and its
+    compaction count) instead of restarting from zero knowledge."""
+    d = str(tmp_path)
+    t = ring_tree()
+    mgr = ck.CheckpointManager(d, keep=4, save_interval=1, full_every=3)
+    mgr.save(1, t)
+    mgr.save(2, t, dirty={"ring": ck.Rows([(0, 1)]), "prio": False,
+                          "pos": True})
+    mgr2 = ck.CheckpointManager(d, keep=4, save_interval=1, full_every=3)
+    mgr2.save(3, t, dirty={"ring": ck.Rows([(1, 2)]), "prio": False,
+                           "pos": True})
+    assert ck.load_manifest(d, 3).get("base_step") == 2
+    mgr2.save(4, t, dirty=ck.dirty_like(t, True))
+    # the 1<-2<-3 chain is full_every-1 = 2 deltas deep -> compact now
+    assert ck.load_manifest(d, 4).get("base_step") is None
+
+
+def test_crash_between_rmtree_and_replace_resumes(tmp_path, monkeypatch):
+    """The dir-layout save's worst crash window: the old final dir is
+    already rmtree'd but the tmp rename never happened.  The manager
+    must resume from the previous retained step and collect the litter."""
+    d = str(tmp_path)
+    t = tree()
+    ck.save(d, 1, t)
+    ck.save(d, 2, t)
+
+    real_replace = os.replace
+
+    def boom(src, dst):
+        raise RuntimeError("killed mid-save")
+
+    monkeypatch.setattr(ck.os, "replace", boom)
+    with pytest.raises(RuntimeError, match="killed"):
+        ck.save(d, 2, tree())  # overwrite save: rmtree ran, rename didn't
+    monkeypatch.setattr(ck.os, "replace", real_replace)
+    assert "step_0000000002.tmp" in os.listdir(d)  # litter
+    assert 2 not in ck.available_steps(d)          # old 2 is gone
+    mgr = ck.CheckpointManager(d, keep=3)
+    assert mgr.latest_step() == 1                  # previous retained step
+    assert not any(n.endswith(".tmp") for n in os.listdir(d))
+    step, out = mgr.restore_latest(sds(t))
+    assert step == 1
+    assert_trees_equal(t, out)
+
+
+def test_crash_mid_single_file_save_resumes(tmp_path, monkeypatch):
+    """Same for the single-file layout: a ``.ckpt.tmp`` left by a crash
+    before the rename is litter, never the latest checkpoint."""
+    d = str(tmp_path)
+    t = tree()
+    ck.save_incremental(d, 1, t)
+
+    def boom(src, dst):
+        raise RuntimeError("killed mid-save")
+
+    monkeypatch.setattr(ck.os, "replace", boom)
+    with pytest.raises(RuntimeError, match="killed"):
+        ck.save_incremental(d, 2, t)
+    monkeypatch.undo()
+    assert "step_0000000002.ckpt.tmp" in os.listdir(d)
+    mgr = ck.CheckpointManager(d, keep=3)
+    assert mgr.latest_step() == 1
+    assert not any(n.endswith(".tmp") for n in os.listdir(d))
+    assert ck.gc_stale_tmp(d) == []  # already clean
+
+
+def test_manifest_names_stable_across_container_kinds(tmp_path):
+    """dict / tuple / NamedTuple nodes all contribute bare component
+    names (no leading dots, no container-kind artifacts) — the regression
+    that made attr-keyed nodes render as ``.field``."""
+    from typing import Any, NamedTuple
+
+    class Inner(NamedTuple):
+        w: Any
+        layers: Any
+
+    t = {"k": (jnp.int32(1), jnp.zeros(2)),
+         "m": Inner(w=jnp.ones(3), layers=[jnp.zeros(2), jnp.arange(2)])}
+    names, leaves, _ = ck._flatten_with_names(t)
+    assert names == ["k/0", "k/1", "m/w", "m/layers/0", "m/layers/1"]
+    assert all("." not in n for n in names)
+    # and the names survive a save/restore roundtrip as the validation key
+    ck.save_incremental(str(tmp_path), 1, t)
+    assert ck.load_manifest(str(tmp_path), 1)["names"] == names
+    out = ck.restore(str(tmp_path), 1, sds(t))
+    assert_trees_equal(t, out)
+
+
 @pytest.mark.slow
 def test_train_resume_bitwise(tmp_path):
     """Kill-and-resume produces the SAME final checkpoint as an
@@ -179,8 +400,11 @@ def test_train_resume_bitwise(tmp_path):
                            "--ckpt-every", "100"],
                    check=True, env=ENV, cwd=REPO, capture_output=True)
     import numpy as np
-    a = np.load(os.path.join(ckdir_a, "step_0000000006", "arrays.npz"))
-    b = np.load(os.path.join(ckdir_b, "step_0000000006", "arrays.npz"))
+    # The manager writes single-file checkpoints: compare the raw stored
+    # arrays (both runs end on a full save, so the payloads are directly
+    # comparable).
+    a = np.load(os.path.join(ckdir_a, "step_0000000006.ckpt"))
+    b = np.load(os.path.join(ckdir_b, "step_0000000006.ckpt"))
     assert set(a.files) == set(b.files)
     for f in a.files:
         np.testing.assert_array_equal(a[f], b[f], err_msg=f)

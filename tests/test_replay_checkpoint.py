@@ -67,6 +67,71 @@ def test_wrong_sampler_restore_raises(tmp_path):
         rck.restore_replay(str(tmp_path), 1, rb2, EX)
 
 
+# --- exact dirty sets / incremental saves ------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["uniform", "per-cumsum", "amper-fr"])
+def test_replay_dirty_delta_roundtrips_bitwise(kind, tmp_path):
+    """Delta saves driven by replay_marks/replay_dirty restore bitwise
+    identical to a full dump — across a wrapping ring arc and
+    out-of-band priority-feedback rows."""
+    cap = 16
+    rb = ReplayBuffer(cap, make_sampler(kind, cap, v_max=8.0, min_csp=4))
+    st = rb.init(EX)
+    k = jax.random.key(3)
+    st = rb.add_batch(st, {"obs": jax.random.normal(k, (12, 4)),
+                           "reward": jnp.arange(12, dtype=jnp.float32)})
+    rck.save_replay(str(tmp_path), 1, st)  # legacy full base
+    marks = rck.replay_marks(st)
+    assert marks == {"pos": 12, "total_adds": 12}
+    # write 9 more rows: the arc wraps (12..16 then 0..5), and touch
+    # priorities on rows the arc does NOT cover
+    st = rb.add_batch(st, {"obs": jax.random.normal(jax.random.fold_in(k, 1),
+                                                    (9, 4)),
+                           "reward": jnp.ones(9)})
+    idx = jnp.array([6, 7, 10], jnp.int32)
+    st = rb.update_priorities(st, idx, jnp.array([0.5, 2.0, 1.5]))
+    dirty = rck.replay_dirty(rb, st, marks, priority_rows=[6, 7, 10])
+    ck.save_incremental(str(tmp_path), 2, st, base_step=1, dirty=dirty)
+    out = rck.restore_replay(str(tmp_path), 2, rb, EX)
+    for name, a, b in zip(ck._flatten_with_names(st)[0],
+                          jax.tree.leaves(st), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def test_replay_dirty_full_wrap_is_whole_ring():
+    cap = 8
+    rb = ReplayBuffer(cap, make_sampler("per-cumsum", cap))
+    st = rb.init(EX)
+    for _ in range(4):
+        st = rb.add_batch(st, {"obs": jnp.zeros((5, 4)),
+                               "reward": jnp.zeros(5)})
+    marks = {"pos": 4, "total_adds": 4}  # 16 adds since marks > capacity
+    dirty = rck.replay_dirty(rb, st, marks)
+    spec = jax.tree.leaves(
+        dirty.storage, is_leaf=lambda x: isinstance(x, ck.Rows))[0]
+    assert spec.ranges == [(0, cap)]
+
+
+def test_replay_dirty_no_writes_skips_storage(tmp_path):
+    """A save with nothing written since the marks stores no storage
+    rows at all (the delta is scalars + any touched priority rows)."""
+    cap = 16
+    rb = ReplayBuffer(cap, make_sampler("uniform", cap))
+    st = rb.init(EX)
+    st = rb.add_batch(st, {"obs": jnp.zeros((4, 4)), "reward": jnp.zeros(4)})
+    rck.save_replay(str(tmp_path), 1, st)
+    dirty = rck.replay_dirty(rb, st, rck.replay_marks(st))
+    ck.save_incremental(str(tmp_path), 2, st, base_step=1, dirty=dirty)
+    man = ck.load_manifest(str(tmp_path), 2)
+    obs_i = man["names"].index("storage/obs")
+    assert man["delta"][obs_i] is None
+    out = rck.restore_replay(str(tmp_path), 2, rb, EX)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 # --- n-step accumulator state ------------------------------------------------
 
 

@@ -301,3 +301,49 @@ def test_async_feedback_exactly_once_in_order(sampler, agent, n_step):
     assert np.isfinite(score)
     for leaf in jax.tree.leaves(res.params):
         assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+# --- metrics / durability satellites -----------------------------------------
+
+
+def test_check_meta_missing_key_is_loud():
+    """A checkpoint written before a topology field existed must be
+    rejected, not silently accepted (.get(k, want) would pass it)."""
+    ok = {"mode": "async", "num_actors": 2}
+    ReplayService._check_meta(ok, "async", num_actors=2)
+    with pytest.raises(ValueError, match="mode"):
+        ReplayService._check_meta({"mode": "sync"}, "async")
+    with pytest.raises(ValueError, match="num_actors"):
+        ReplayService._check_meta({"mode": "async"}, "async", num_actors=2)
+    with pytest.raises(ValueError, match="num_actors=3"):
+        ReplayService._check_meta({"mode": "async", "num_actors": 3},
+                                  "async", num_actors=2)
+
+
+def test_prefetch_beta_not_published_for_a_draw_that_never_happened():
+    """last_beta is the β of the latest *completed* slab draw: a draw
+    that raises must leave it untouched (it was being set before the
+    sample call, so metrics could report a β no slab ever used)."""
+    import queue
+    import threading
+    from types import SimpleNamespace
+
+    from repro.runtime.pipeline import PrefetchPipeline
+
+    state = SimpleNamespace(size=jnp.int32(64))
+
+    def failing_sample(st, key, beta):
+        raise RuntimeError("sampler exploded")
+
+    stop = threading.Event()
+    p = PrefetchPipeline(failing_sample, lambda: (state, 0),
+                         out_q=queue.Queue(2), stop=stop,
+                         base_key=jax.random.key(0), slab=2, min_size=1,
+                         beta_fn=lambda v: 0.7)
+    p.start()
+    p.join(timeout=10.0)
+    assert not p.is_alive()
+    assert isinstance(p.error, RuntimeError)
+    assert p.last_beta is None  # no completed draw -> no published beta
+    assert p.draws == 0
+    stop.set()
