@@ -16,15 +16,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-import repro.core.quantize as qz
 from repro.core.amper import AmperConfig, AmperSampler
 from repro.core.per import CumsumPER
+# BINS and the Laplace-smoothed total-nats KL are shared with the live
+# sampling-error gauge (repro.obs.probes.SamplingErrorMonitor) so the
+# offline Fig. 7 study and the online monitor agree by construction.
+from repro.obs.probes import BINS, kl_nats, priority_bin_counts
 
 BATCH, RUNS = 64, 100
-
-
-BINS = 64  # sampled-PRIORITY histogram (Fig 7(a) compares distributions
-           # of sampled priority values, not per-item frequencies)
 
 
 def sample_counts(sampler, state, key, prio: np.ndarray) -> np.ndarray:
@@ -32,17 +31,8 @@ def sample_counts(sampler, state, key, prio: np.ndarray) -> np.ndarray:
     fn = jax.jit(lambda s, k: sampler.sample(s, k, BATCH))
     for r in range(RUNS):
         idx = np.asarray(fn(state, jax.random.fold_in(key, r)))
-        vals = prio[idx]
-        counts += np.histogram(vals, bins=BINS, range=(0.0, 1.0))[0]
+        counts += priority_bin_counts(prio[idx])
     return counts
-
-
-def kl_nats(p_counts: np.ndarray, q_counts: np.ndarray) -> float:
-    """Total KL over the sample (binned counts, Laplace smoothed)."""
-    n_samples = p_counts.sum()
-    p = (p_counts + 0.5) / (p_counts.sum() + 0.5 * len(p_counts))
-    q = (q_counts + 0.5) / (q_counts.sum() + 0.5 * len(q_counts))
-    return float(n_samples * np.sum(p * np.log(p / q)))
 
 
 def run(n: int = 10_000, m_values=(2, 4, 8, 12), lam_values=(0.05, 0.5, 2.0),
@@ -58,7 +48,7 @@ def run(n: int = 10_000, m_values=(2, 4, 8, 12), lam_values=(0.05, 0.5, 2.0),
     noise_floor = kl_nats(q_ref2, q_ref)
 
     uni = np.random.default_rng(seed).integers(0, n, BATCH * RUNS)
-    uni_counts = np.histogram(prio_np[uni], bins=BINS, range=(0.0, 1.0))[0].astype(float)
+    uni_counts = priority_bin_counts(prio_np[uni]).astype(float)
     kl_uniform = kl_nats(uni_counts, q_ref)
 
     rows = []

@@ -33,12 +33,24 @@ def main() -> None:
     ap.add_argument("--profile", action="store_true",
                     help="wrap each benched section in jax.profiler.trace; "
                          "traces land under <out>/profile/<section>")
+    ap.add_argument("--metrics-out", default=None,
+                    help="telemetry JSONL path: enables the repro.obs "
+                         "registry for the whole run and writes one "
+                         "snapshot per section (spans, counters) there")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     failures = []
     written = []
 
     from benchmarks import common
+
+    exporter = registry = None
+    if args.metrics_out:
+        from repro import obs
+
+        registry = obs.Registry(enabled=True)
+        obs.set_registry(registry)
+        exporter = obs.JsonlExporter(args.metrics_out)
 
     def section(name, fn):
         if only and name not in only:
@@ -58,10 +70,15 @@ def main() -> None:
         except Exception:
             failures.append(name)
             traceback.print_exc()
+            if exporter:
+                exporter.write_event("section_failed", section=name)
             return
         if rows:
             written.append(common.write_bench_json(name, rows,
                                                    out_dir=args.out))
+        if exporter:
+            exporter.write_snapshot(registry.snapshot(),
+                                    extra={"section": name})
 
     def sharded_subprocess():
         """Fresh process so XLA_FLAGS can force the 8-device host mesh."""
@@ -113,6 +130,9 @@ def main() -> None:
         steps=120))
     section("sharded", sharded_subprocess)
 
+    if exporter:
+        exporter.close()
+        print(f"\ntelemetry JSONL: {args.metrics_out}")
     if written:
         print(f"\nBENCH artifacts: {written}")
     if failures:

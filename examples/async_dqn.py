@@ -17,11 +17,13 @@ the directory), and AUTO-RESUMES from the latest checkpoint on relaunch
 Run:  PYTHONPATH=src python examples/async_dqn.py --steps 2000
       PYTHONPATH=src python examples/async_dqn.py --sampler per-sumtree --sync
       PYTHONPATH=src python examples/async_dqn.py --ckpt-dir /tmp/run1
+      PYTHONPATH=src python examples/async_dqn.py --metrics-out /tmp/run1.jsonl
 """
 import argparse
 
 import jax
 
+from repro.obs import Telemetry
 from repro.rl.dqn import DQNConfig
 from repro.rl.envs import available_envs
 from repro.runtime import ReplayService
@@ -56,6 +58,10 @@ ap.add_argument("--ckpt-every", type=int, default=500,
                 help="learner steps between snapshots")
 ap.add_argument("--beta-end", type=float, default=None,
                 help="anneal the PER IS exponent to this value (e.g. 1.0)")
+ap.add_argument("--metrics-out", default=None,
+                help="write telemetry (JSONL event log + replay-health "
+                     "probes) to this path; Prometheus text lands next "
+                     "to it as <path>.prom")
 args = ap.parse_args()
 
 REPLAY_RATIO = 4  # frames per learner step, in units of num_envs
@@ -72,10 +78,14 @@ cfg = DQNConfig(env=args.env, sampler=args.sampler, agent=args.agent,
                 eps_decay_steps=decay, target_sync=100, v_max=8.0,
                 beta_end=args.beta_end,
                 beta_anneal_steps=args.steps if args.beta_end else None)
+tel = (Telemetry(metrics_out=args.metrics_out,
+                 prometheus_out=args.metrics_out + ".prom")
+       if args.metrics_out else None)
 svc = ReplayService(cfg, sync=args.sync,
                     num_actors=1 if args.sync else args.actors,
                     chunk_len=args.chunk, slab=args.slab,
-                    max_replay_ratio=REPLAY_RATIO * args.num_envs)
+                    max_replay_ratio=REPLAY_RATIO * args.num_envs,
+                    telemetry=tel)
 key = jax.random.key(args.seed)
 manager = (CheckpointManager(args.ckpt_dir, keep=3,
                              save_interval=args.ckpt_every)
@@ -101,3 +111,6 @@ if m["mode"] == "async":
 print(f"train return_mean = {m['return_mean']:.1f}")
 test = float(svc.dqn.evaluate(res.params, jax.random.key(args.seed + 100), 10))
 print(f"test(10ep)        = {test:.1f}")
+if args.metrics_out:
+    print(f"telemetry: {args.metrics_out} (+ .prom); inspect with "
+          f"`python -m repro.obs.report {args.metrics_out}`")

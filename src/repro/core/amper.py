@@ -428,8 +428,13 @@ class AmperSampler:
         return AmperState(pq=pq, valid=valid)
 
     def build_csp(self, state: AmperState, key: jax.Array) -> CspResult:
+        from repro.obs import span  # deferred: keep core import-light
+
         fn = build_csp_fr if self.variant == "fr" else build_csp_k
-        return fn(state.pq, state.valid, key, self.cfg)
+        # No-op under jit (the usual path); times the eager CSP rebuild
+        # in tests/benchmarks/probes.
+        with span("csp_rebuild"):
+            return fn(state.pq, state.valid, key, self.cfg)
 
     def sample(self, state: AmperState, key: jax.Array, batch: int,
                stratified: bool = True) -> jax.Array:

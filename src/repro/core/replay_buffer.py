@@ -294,7 +294,11 @@ class ReplayBuffer:
         this draw — the hook annealed schedules (β→1 over training, per
         Schaul et al.) thread through; may be a traced scalar.
         """
-        idx = self.sampler.sample(state.sampler_state, key, batch)
+        from repro.obs import span  # deferred: keep core import-light
+
+        # No-op under jit; times eager draws (tests/benchmarks/probes).
+        with span("replay_sample"):
+            idx = self.sampler.sample(state.sampler_state, key, batch)
         batch_tree = jax.tree.map(lambda buf: buf[idx], state.storage)
         prios = self.sampler.priorities(state.sampler_state)
         # Shared weight formula (one normalisation constant for the

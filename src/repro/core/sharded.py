@@ -328,7 +328,11 @@ class ShardedAmperSampler(AmperSampler):
     def sample(self, state: AmperState, key: jax.Array, batch: int,
                stratified: bool = True) -> jax.Array:
         del stratified  # CSP sampling is uniform by construction
-        return self._sample_fn(batch)(state.pq, state.valid, key)
+        from repro.obs import span  # deferred: keep core import-light
+
+        # No-op under jit; times the eager sharded dispatch path.
+        with span("sharded_sample"):
+            return self._sample_fn(batch)(state.pq, state.valid, key)
 
     def membership(self, state: AmperState, key: jax.Array) -> jax.Array:
         """Global bool[capacity] CSP membership for ``key`` (test/analysis

@@ -221,7 +221,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
              rules_preset: str = "tp") -> dict:
     """Production (scan) build: compile proof + memory analysis.
     Analysis (unrolled) build: true flops/bytes/collectives -> roofline."""
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = {"arch": arch, "shape": shape,
            "mesh": "2x16x16" if multi_pod else "16x16"}
     cell = SHAPE_CELLS[shape]
@@ -233,9 +233,9 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
             out.update(status="skip", reason=res[1])
             return out
         lowered, mesh, cfg, model_flops = res
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
         ma = compiled.memory_analysis()
         out.update(
             status="ok", lower_s=round(t_lower, 2),
@@ -248,11 +248,11 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
                                        + ma.temp_size_in_bytes),
             })
         if analyze:
-            t1 = time.time()
+            t1 = time.perf_counter()
             report = analysis_report(arch, shape, multi_pod, cfg,
                                       model_flops, cfg_overrides,
                                       rules_preset)
-            out.update(analysis_compile_s=round(time.time() - t1, 2),
+            out.update(analysis_compile_s=round(time.perf_counter() - t1, 2),
                        **report)
             if cell.kind == "decode":
                 # bandwidth floor: params + cache must stream once/token.
@@ -284,7 +284,7 @@ def run_amper_cell(multi_pod: bool, table_log2: int = 28,
     from repro.core import sharded as shc
     out = {"arch": "amper-replay", "shape": f"sample_2^{table_log2}",
            "mesh": "2x16x16" if multi_pod else "16x16"}
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)
         n = 1 << table_log2
@@ -302,7 +302,7 @@ def run_amper_cell(multi_pod: bool, table_log2: int = 28,
             lowered = jax.jit(fn).lower(pq, valid, key)
             compiled = lowered.compile()
         report = hlo_analysis.analyze(compiled, mesh, model_flops=None)
-        out.update(status="ok", compile_s=round(time.time() - t0, 2), **report)
+        out.update(status="ok", compile_s=round(time.perf_counter() - t0, 2), **report)
     except Exception as e:
         out.update(status="error", error=f"{type(e).__name__}: {e}",
                    traceback=traceback.format_exc()[-2000:])

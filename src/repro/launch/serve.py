@@ -53,17 +53,17 @@ def main(argv=None):
     from repro.serving import Engine
     engine = Engine(model, params)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     logits, cache = engine.prefill(batch, max_len)
     jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
+    t_prefill = time.perf_counter() - t0
     print(f"prefill: batch={B} prompt={args.prompt_len} "
           f"{t_prefill * 1e3:.1f} ms")
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     res = engine.generate(batch, args.gen)
     jax.block_until_ready(res.tokens)
-    dt = (time.time() - t0) / args.gen
+    dt = (time.perf_counter() - t0) / args.gen
     print(f"decode: {args.gen} tokens, {dt * 1e3:.2f} ms/token "
           f"({B / dt:.1f} tok/s aggregate)")
     print("sample:", res.tokens[0, :16].tolist())

@@ -1,0 +1,254 @@
+"""Paper-grounded replay-health probes.
+
+The paper's central claim is that AMPER preserves PER's sampling
+distribution (Fig. 7: KL of sampled-priority histograms vs exact PER),
+and the async runtime's correctness claim is that priority staleness
+stays bounded.  Offline, ``benchmarks/fig7_sampling_error.py`` checks
+the first; this module makes both *continuous*:
+
+* :data:`BINS` / :func:`kl_nats` / :func:`chi_square` are the canonical
+  sampled-priority binning and divergence definitions.  The Fig. 7
+  benchmark imports them from here, so the live gauge and the offline
+  study are the same computation by construction.
+* :class:`SamplingErrorMonitor` keeps a windowed histogram of sampled
+  priority values and reports KL / chi-square against the exact PER law
+  (``P(i) = p_i / sum p``) as live gauges — Fig. 7 as a dashboard line.
+* :func:`make_replay_probe` builds a jitted probe that *re-derives* one
+  draw's CSP off the hot path: given the same state and PRNG key the
+  pipeline used, it reproduces the CSP build and uniform pick exactly
+  (all fr_modes are bit-identical), yielding exact match-count, CSP
+  occupancy, fallback and sampled priorities for that draw without
+  adding anything to the fused sampling dispatch.
+* :class:`ReplayHealth` wires probe outputs into registry instruments
+  (``csp_count``, ``csp_occupancy``, ``csp_match_count``,
+  ``fallback_draws``, ``replay_live``, ``sampling_kl_nats``,
+  ``sampling_chi2``).
+
+Everything here is host-side except the probe function itself, which is
+a *separate* jitted computation run at a caller-chosen cadence — the
+production sampling path is never touched.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.obs.metrics import Registry
+
+# Sampled-PRIORITY histogram over (0, 1): Fig. 7(a) compares the
+# distributions of sampled priority values, not per-item frequencies.
+BINS = 64
+
+
+def priority_bin_counts(values: np.ndarray) -> np.ndarray:
+    """The canonical binning: counts of sampled priorities over (0,1)."""
+    return np.histogram(np.asarray(values), bins=BINS, range=(0.0, 1.0))[0]
+
+
+def kl_nats(p_counts: np.ndarray, q_counts: np.ndarray) -> float:
+    """Total KL over the sample (binned counts, Laplace smoothed).
+
+    Reported as total nats over the sample (``n * KL(p || q)``) to match
+    the magnitudes in the paper's Fig. 7.
+    """
+    p_counts = np.asarray(p_counts, dtype=float)
+    q_counts = np.asarray(q_counts, dtype=float)
+    n_samples = p_counts.sum()
+    p = (p_counts + 0.5) / (p_counts.sum() + 0.5 * len(p_counts))
+    q = (q_counts + 0.5) / (q_counts.sum() + 0.5 * len(q_counts))
+    return float(n_samples * np.sum(p * np.log(p / q)))
+
+
+def chi_square(p_counts: np.ndarray, q_counts: np.ndarray) -> float:
+    """Pearson chi-square of observed counts vs the reference
+    distribution (same Laplace smoothing as :func:`kl_nats`)."""
+    p_counts = np.asarray(p_counts, dtype=float)
+    q_counts = np.asarray(q_counts, dtype=float)
+    n = p_counts.sum()
+    if n == 0:
+        return 0.0
+    q = (q_counts + 0.5) / (q_counts.sum() + 0.5 * len(q_counts))
+    expected = n * q
+    return float(np.sum((p_counts - expected) ** 2 / expected))
+
+
+class SamplingErrorMonitor:
+    """Windowed sampling-error monitor: Fig. 7 as a live gauge.
+
+    Keeps bin counts of the last ``window`` observed draws (each draw is
+    one batch of sampled priority values) and compares them against a
+    reference distribution — by default the *exact PER law*, whose bin
+    masses are ``sum of p_i per bin`` (``P(i) = p_i / sum p``, so the
+    sampled-priority density of bin b is its priority mass).  Divergences
+    use the same :func:`kl_nats` / :func:`chi_square` the offline Fig. 7
+    benchmark uses, on the same binning, so online and offline numbers
+    agree exactly on identical draws.
+    """
+
+    def __init__(self, registry: Optional[Registry] = None,
+                 window: int = 200, prefix: str = "sampling"):
+        self.window = int(window)
+        self._draws: deque[np.ndarray] = deque()
+        self._counts = np.zeros(BINS, dtype=float)
+        self._ref = np.ones(BINS, dtype=float)  # uniform until told better
+        self._kl_gauge = self._chi2_gauge = self._n_gauge = None
+        if registry is not None:
+            self._kl_gauge = registry.gauge(
+                f"{prefix}_kl_nats",
+                help="windowed KL of sampled priorities vs exact PER law "
+                     "(total nats, Fig. 7 convention)")
+            self._chi2_gauge = registry.gauge(
+                f"{prefix}_chi2",
+                help="windowed chi-square of sampled priorities vs ref law")
+            self._n_gauge = registry.gauge(
+                f"{prefix}_window_samples",
+                help="samples currently inside the monitor window")
+
+    def set_reference_counts(self, q_counts: np.ndarray) -> None:
+        """Install reference bin counts/masses (any scale — divergences
+        normalise q internally)."""
+        self._ref = np.asarray(q_counts, dtype=float).copy()
+
+    def set_reference_priorities(self, priorities: np.ndarray) -> None:
+        """Derive the exact-PER-law reference from a live priority
+        vector: bin mass b = sum of priorities falling in bin b."""
+        p = np.asarray(priorities, dtype=float)
+        p = p[p > 0]
+        self.set_reference_counts(
+            np.histogram(p, bins=BINS, range=(0.0, 1.0), weights=p)[0])
+
+    def observe(self, sampled_priorities: np.ndarray) -> None:
+        """Record one draw's sampled priority values and refresh gauges."""
+        c = priority_bin_counts(sampled_priorities).astype(float)
+        self._draws.append(c)
+        self._counts += c
+        while len(self._draws) > self.window:
+            self._counts -= self._draws.popleft()
+        if self._kl_gauge is not None:
+            self._kl_gauge.set(self.kl())
+            self._chi2_gauge.set(self.chi_square())
+            self._n_gauge.set(self._counts.sum())
+
+    @property
+    def counts(self) -> np.ndarray:
+        return self._counts.copy()
+
+    def kl(self) -> float:
+        return kl_nats(self._counts, self._ref)
+
+    def chi_square(self) -> float:
+        return chi_square(self._counts, self._ref)
+
+
+def make_replay_probe(sampler, batch: int):
+    """A jitted CSP probe for AMPER-style samplers, or None.
+
+    Given the exact ``(state, key)`` the production draw used, the probe
+    replays the key tree of :meth:`AmperSampler.sample` — split into
+    (csp, pick), build the CSP, uniform-pick with fallback — so its
+    outputs describe *that* draw exactly (every fr_mode is bit-identical
+    to this reference path by the sampler's own contract).  Returns
+    ``(match_count, csp_count, live, fallback, sampled_priorities,
+    ref_mass)`` as device arrays; ``ref_mass`` is the exact-PER-law bin
+    mass of the live priority vector for :class:`SamplingErrorMonitor`.
+
+    Samplers without ``build_csp`` (PER baselines, uniform) get a
+    reduced probe reporting live size and sampled priorities only.
+
+    Priorities are normalised by the sampler's ``cfg.v_max`` (1 when the
+    sampler has none, e.g. the Fig. 7 study's U[0,1] priorities) so the
+    (0, 1) binning covers the live priority scale; values at/above the
+    scale land in the top bin on BOTH the observed and reference sides.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    v_max = float(getattr(getattr(sampler, "cfg", None), "v_max", 0.0)
+                  or 1.0)
+
+    def _ref_mass(prio):
+        p = prio / v_max
+        b = jnp.clip((p * BINS).astype(jnp.int32), 0, BINS - 1)
+        return jnp.zeros(BINS, jnp.float32).at[b].add(
+            jnp.where(p > 0, p, 0.0))
+
+    if hasattr(sampler, "build_csp"):
+        from repro.core.amper import sample_from_csp
+
+        @jax.jit
+        def probe(state, key):
+            kcsp, kpick = jax.random.split(key)
+            csp = sampler.build_csp(state, kcsp)
+            live = jnp.sum(state.valid.astype(jnp.int32))
+            idx = sample_from_csp(csp, kpick, batch, live)
+            prio = sampler.priorities(state)
+            match = jnp.sum(csp.selected.astype(jnp.int32))
+            return (match, csp.count, live,
+                    (csp.count == 0).astype(jnp.int32),
+                    prio[idx] / v_max, _ref_mass(prio))
+
+        return probe
+
+    @jax.jit
+    def probe(state, key):
+        prio = sampler.priorities(state)
+        live = jnp.sum((prio > 0).astype(jnp.int32))
+        idx = sampler.sample(state, key, batch)
+        zero = jnp.int32(0)
+        return zero, zero, live, zero, prio[idx] / v_max, _ref_mass(prio)
+
+    return probe
+
+
+class ReplayHealth:
+    """Bridges probe outputs into registry instruments.
+
+    Construct once per run, call :meth:`update` at a chosen cadence with
+    the same ``(state, key)`` a production draw used.  The probe runs as
+    its own jitted computation (off the hot path); the host-side gauge
+    writes are lock-free registry updates.
+    """
+
+    def __init__(self, registry: Registry, sampler, batch: int,
+                 window: int = 200):
+        self._probe = make_replay_probe(sampler, batch)
+        self._csp_capacity = getattr(
+            getattr(sampler, "cfg", None), "csp_capacity", 0)
+        self._has_csp = hasattr(sampler, "build_csp")
+        self.monitor = SamplingErrorMonitor(registry, window=window)
+        r = registry
+        self._g_count = r.gauge("csp_count", help="CSP fill for last probed draw")
+        self._g_occ = r.gauge("csp_occupancy",
+                              help="CSP fill / csp_capacity (0..1)")
+        self._g_match = r.gauge("csp_match_count",
+                                help="TCAM match count before compaction")
+        self._g_live = r.gauge("replay_live", help="live replay rows")
+        self._c_fallback = r.counter(
+            "fallback_draws", help="probed draws that fell back to uniform")
+        self._c_probes = r.counter("probe_draws", help="probed draws")
+
+    def update(self, state, key) -> dict:
+        """Probe one draw; returns the host-side probe readings."""
+        match, count, live, fallback, p_sel, ref = self._probe(state, key)
+        match = int(match)
+        count = int(count)
+        live = int(live)
+        fallback = int(fallback)
+        self._g_live.set(live)
+        if self._has_csp:
+            self._g_count.set(count)
+            self._g_match.set(match)
+            if self._csp_capacity:
+                self._g_occ.set(count / self._csp_capacity)
+        self._c_probes.add()
+        if fallback:
+            self._c_fallback.add()
+        self.monitor.set_reference_counts(np.asarray(ref))
+        # Clip into [0, 1] so normalised priorities at exactly the scale
+        # ceiling bin with the reference's top-bin clamp (np.histogram's
+        # final bin is right-closed).
+        self.monitor.observe(np.clip(np.asarray(p_sel), 0.0, 1.0))
+        return {"match_count": match, "csp_count": count, "live": live,
+                "fallback": fallback, "kl_nats": self.monitor.kl()}

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import span
 from repro.runtime import prng
 
 
@@ -240,10 +241,11 @@ class Actor(threading.Thread):
                 continue  # park at the loop-top gate before rolling out
             if self._stop_evt.is_set():
                 return
-            (env_state, obs, ep_ret, nstep, transitions, valid,
-             finished) = self._rollout(
-                self._params_fn(), env_state, obs, jnp.int32(step), ep_ret,
-                nstep, prng.chunk_key(k_roll, chunk))
+            with span("rollout"):
+                (env_state, obs, ep_ret, nstep, transitions, valid,
+                 finished) = self._rollout(
+                    self._params_fn(), env_state, obs, jnp.int32(step),
+                    ep_ret, nstep, prng.chunk_key(k_roll, chunk))
             fin = np.asarray(finished).ravel()
             # n-step warm-up: invalid rows form a prefix (the window only
             # fills once), so drop them host-side — the replay thread

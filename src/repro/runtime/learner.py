@@ -32,6 +32,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs import get_registry, span
 from repro.runtime.pipeline import BatchSlab
 
 
@@ -109,6 +110,8 @@ class Learner:
         """Consume slabs until ``n_steps`` learner steps are done (rounded
         up to a whole slab).  Returns (params, target_params)."""
         self.opt_m, self.opt_v = opt_m, opt_v
+        steps_c = get_registry().counter(
+            "learner_steps_total", help="optimizer steps taken")
         try:
             while self.steps_done < n_steps and not self._stop.is_set():
                 slab = self._get_slab()
@@ -116,11 +119,13 @@ class Learner:
                     break
                 if self.first_step_time is None:
                     self.first_step_time = time.perf_counter()
-                params, opt_m, opt_v, td, loss = self._learn(
-                    params, target_params, opt_m, opt_v,
-                    jnp.int32(self.steps_done), slab.batch, slab.weights)
+                with span("learn"):
+                    params, opt_m, opt_v, td, loss = self._learn(
+                        params, target_params, opt_m, opt_v,
+                        jnp.int32(self.steps_done), slab.batch, slab.weights)
                 self.opt_m, self.opt_v = opt_m, opt_v
                 s = int(td.shape[0])
+                steps_c.add(s)
                 self._feedback_put(Feedback(
                     seq0=slab.seq0, idx=slab.idx, td=td,
                     stamp=slab.stamp, version=slab.version))

@@ -27,6 +27,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.obs import span
 from repro.runtime import prng
 from repro.runtime.actor import PauseGate
 
@@ -82,7 +83,9 @@ class PrefetchPipeline(threading.Thread):
                  base_key: jax.Array, slab: int, min_size: int,
                  device=None, beta_fn: Callable[[int], float] | None = None,
                  gate: PauseGate | None = None, start_draw: int = 0,
-                 start_seq: int = 0):
+                 start_seq: int = 0,
+                 probe: Callable[[Any, jax.Array], None] | None = None,
+                 probe_every: int = 0):
         super().__init__(name="replay-prefetch", daemon=True)
         self._sample = sample_fn          # jitted slab draw
         self._state_fn = state_fn         # () -> (buffer_state, version)
@@ -101,6 +104,12 @@ class PrefetchPipeline(threading.Thread):
         # or not), ``seq`` the global batch sequence of the next slab.
         self._start_draw = start_draw
         self._start_seq = start_seq
+        # Replay-health probe: called with the exact (state, key) of one
+        # in every ``probe_every`` slab draws, AFTER the draw itself, so
+        # the probe can re-derive that draw's CSP/sampled-priority facts
+        # (see repro.obs.probes) without touching the production path.
+        self._probe = probe
+        self._probe_every = max(int(probe_every), 0) if probe else 0
         self.draws = start_draw
         self.slabs_done = 0
         # IS exponent the latest slab draw used (None until the first
@@ -145,13 +154,17 @@ class PrefetchPipeline(threading.Thread):
                 # replay.sample fall back to its constructor constant.
                 beta = (jnp.float32(self._beta_fn(version))
                         if self._beta_fn is not None else None)
-                idx, batch, weights, stamp = self._sample(
-                    state, prng.sample_key(self._base_key, draw), beta)
+                key = prng.sample_key(self._base_key, draw)
+                with span("slab_draw"):
+                    idx, batch, weights, stamp = self._sample(
+                        state, key, beta)
                 # Publish β only once the draw has returned: a draw that
                 # raises must not leave metrics reporting the β of a
                 # slab that never existed.
                 if beta is not None:
                     self.last_beta = float(beta)
+                if self._probe_every and draw % self._probe_every == 0:
+                    self._probe(state, key)
                 draw += 1
                 self.draws = draw
                 if self._device is not None:

@@ -59,6 +59,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.rl.dqn import DQNConfig, make_dqn
 from repro.runtime.actor import ActorPool, make_rollout, put_with_stop
 from repro.runtime.learner import Feedback, Learner, make_slab_learner
@@ -72,6 +73,113 @@ class RunResult(NamedTuple):
     target_params: Any
     buffer: Any          # final canonical ReplayState
     metrics: dict
+
+
+def _hstats(snap: obs.Snapshot, name: str) -> dict:
+    """Histogram summary from a snapshot, zeros when absent/empty."""
+    data = snap.data.get(name)
+    if not data:
+        return {"count": 0, "mean": 0.0, "min": 0.0, "max": 0.0,
+                "p50": 0.0, "p95": 0.0, "p99": 0.0}
+    return obs.hist_stats(data, snap.meta[name]["bounds"])
+
+
+def _cval(snap: obs.Snapshot, name: str) -> float:
+    data = snap.data.get(name)
+    if not data:
+        return 0.0
+    v = data.get("value", 0.0)
+    return 0.0 if v != v else float(v)  # NaN (unset gauge) -> 0
+
+
+class _RunTelemetry:
+    """Per-run observability bundle: registry, instruments, exporters.
+
+    Built at ``run()`` entry and installed as the process-global
+    registry for the run's duration, so spans recorded by the runtime
+    threads and by the checkpoint/core layers all land in one place;
+    :meth:`finish` restores the previous registry.  The service always
+    runs with an ENABLED registry (the aggregate staleness/queue-depth
+    stats were always kept); the user's Telemetry spec adds exporters
+    and the replay-health probe on top.  ``RunResult.metrics`` is
+    computed from a snapshot diff against the run-start snapshot, so a
+    long-lived caller-supplied registry still yields per-run numbers.
+    """
+
+    def __init__(self, spec: obs.Telemetry | None):
+        # No spec -> aggregate stats only: no exporters and no health
+        # probe (probing spends a jitted dispatch per cadence tick,
+        # which un-instrumented runs and perf benchmarks must not pay).
+        self.spec = (spec if spec is not None
+                     else obs.Telemetry(probe_every=0))
+        self.registry = (self.spec.registry if self.spec.registry is not None
+                         else obs.Registry(enabled=True))
+        r = self.registry
+        self.frames = r.counter(
+            "frames_total", help="environment frames appended to replay")
+        self.blocks = r.counter(
+            "blocks_total", help="transition blocks absorbed by the core")
+        self.fb_enqueued = r.counter(
+            "feedback_enqueued_total",
+            help="priority-feedback slabs enqueued")
+        self.fb_applied = r.counter(
+            "feedback_applied_total", help="priority-feedback slabs applied")
+        self.staleness = r.histogram(
+            "staleness_steps", bounds=obs.INT_BUCKETS,
+            help="priority-feedback staleness in learner steps")
+        self.work_depth = r.histogram(
+            "work_queue_depth", bounds=obs.INT_BUCKETS,
+            help="actor->replay queue depth per drained item")
+        self.batch_depth = r.histogram(
+            "batch_queue_depth", bounds=obs.INT_BUCKETS,
+            help="prefetch->learner queue depth per drained item")
+        self.snap_pause = r.histogram(
+            "snapshot_pause_us", bounds=obs.US_BUCKETS,
+            help="pipeline pause per snapshot: COW capture cost in async "
+                 "mode, the blocking save in sync mode (microseconds)")
+        self.base = r.snapshot()
+        self.exporter = (obs.JsonlExporter(self.spec.metrics_out)
+                         if self.spec.metrics_out else None)
+        self.health: obs.ReplayHealth | None = None
+        self._prev = obs.set_registry(r, profile=self.spec.profile)
+        self._finished = False
+
+    def probe_hook(self, sampler, batch: int):
+        """Build the pipeline's probe callback (None when probing is
+        off).  The callback runs on the prefetch thread at cadence: it
+        re-derives the draw's CSP facts, refreshes the health gauges,
+        and appends a JSONL snapshot line so the log is a timeline."""
+        if self.spec.probe_every <= 0:
+            return None
+        self.health = obs.ReplayHealth(self.registry, sampler, batch,
+                                       window=self.spec.window)
+
+        def hook(state, key):
+            self.health.update(state.sampler_state, key)
+            if self.exporter is not None:
+                self.exporter.write_snapshot(self.diff())
+
+        return hook
+
+    def diff(self) -> obs.Snapshot:
+        return self.registry.snapshot().diff(self.base)
+
+    def event(self, name: str, **fields) -> None:
+        if self.exporter is not None:
+            self.exporter.write_event(name, **fields)
+
+    def finish(self, extra: dict | None = None) -> None:
+        """Final JSONL snapshot + Prometheus dump, then restore the
+        previously installed global registry.  Idempotent."""
+        if self._finished:
+            return
+        self._finished = True
+        if self.exporter is not None:
+            self.exporter.write_snapshot(self.diff(), extra=extra)
+            self.exporter.close()
+        if self.spec.prometheus_out:
+            obs.write_prometheus(self.registry, self.spec.prometheus_out)
+        obs.set_registry(self._prev)
 
 
 class ReplayService:
@@ -95,6 +203,12 @@ class ReplayService:
         ``metrics["feedback_seqs"]`` (O(learner steps) memory — for tests
         and debugging; the aggregate staleness stats are always kept).
       device: optional target device for prefetched batches.
+      telemetry: an :class:`repro.obs.Telemetry` spec.  The service
+        always keeps registry-backed run metrics (staleness, queue
+        depths, snapshot pauses — the compat ``RunResult.metrics`` view
+        is computed from them); the spec adds the JSONL/Prometheus
+        exporters and the replay-health probe (live Fig. 7 KL gauge,
+        CSP occupancy, fallback rate) on top.
     """
 
     def __init__(self, cfg: DQNConfig, *, num_actors: int = 2,
@@ -102,7 +216,8 @@ class ReplayService:
                  prefetch_depth: int = 2, queue_size: int = 8,
                  min_size: int | None = None,
                  max_replay_ratio: float | None = None,
-                 feedback_log: bool = False, device=None):
+                 feedback_log: bool = False, device=None,
+                 telemetry: obs.Telemetry | None = None):
         if sync and num_actors != 1:
             raise ValueError("sync mode is defined for num_actors=1 "
                              f"(got {num_actors})")
@@ -120,6 +235,7 @@ class ReplayService:
                                  cfg.replay_size)))
         self.max_replay_ratio = max_replay_ratio
         self.feedback_log = feedback_log
+        self.telemetry = telemetry
         self.dqn = make_dqn(cfg)
         rb = self.dqn.replay
         # One jitted callable per pipeline stage, built once so repeated
@@ -190,9 +306,15 @@ class ReplayService:
         """
         if manager is not None:
             manager.install_preemption_hook()  # no-op off the main thread
-        if self.sync:
-            return self._run_sync(key, n_steps, manager)
-        return self._run_async(key, n_steps, manager)
+        tel = _RunTelemetry(self.telemetry)
+        try:
+            if self.sync:
+                result = self._run_sync(key, n_steps, manager, tel)
+            else:
+                result = self._run_async(key, n_steps, manager, tel)
+        finally:
+            tel.finish(extra={"mode": "sync" if self.sync else "async"})
+        return result
 
     # --- checkpoint snapshot targets ----------------------------------- #
 
@@ -258,8 +380,8 @@ class ReplayService:
     # --- strict synchronous mode -------------------------------------- #
 
     def _run_sync(self, key: jax.Array, n_steps: int,
-                  manager: ckpt_mod.CheckpointManager | None = None
-                  ) -> RunResult:
+                  manager: ckpt_mod.CheckpointManager | None,
+                  tel: _RunTelemetry) -> RunResult:
         cfg = self.cfg
         start = 0
         state = None
@@ -294,12 +416,20 @@ class ReplayService:
                                         or t + 1 == n_steps):
                 dirty = (self._sync_dirty(state, marks, prev_save_t, t + 1)
                          if marks is not None else None)
+                # Sync saves block the training loop, so the whole save
+                # IS the pipeline pause — record it in the same
+                # instrument the async COW capture uses (uniform schema).
+                t_save = time.perf_counter()
                 manager.save(t + 1,
                              {"key_data": jax.random.key_data(key),
                               "state": state},
                              meta={"mode": "sync", "step": t + 1,
                                    "n_steps": n_steps},
                              dirty=dirty)
+                tel.snap_pause.observe(
+                    (time.perf_counter() - t_save) * 1e6)
+                tel.event("checkpoint", step=t + 1,
+                          delta=dirty is not None)
                 marks = rck.replay_marks(state.buffer)
                 prev_save_t = t + 1
                 if manager.preempted and t + 1 < n_steps:
@@ -313,6 +443,8 @@ class ReplayService:
         learn_wall = (wall_end - t_first_learn if t_first_learn is not None
                       else float("nan"))
         curve = np.asarray(jnp.stack(returns)) if returns else np.zeros(0)
+        snap = tel.diff()
+        pause = _hstats(snap, "snapshot_pause_us")
         metrics = {
             "mode": "sync",
             "learner_steps": learner_steps,
@@ -327,13 +459,42 @@ class ReplayService:
             # β the last executed step's draw used — the annealed value,
             # not the frozen constructor default.
             "beta": float(self.dqn.beta_at(max(t_end - 1, 0))),
-            "staleness": {"count": 0, "mean": 0.0, "max": 0},
+            # Sync draws apply feedback inline — staleness is zero by
+            # construction; the keys exist so both modes share a schema.
+            "staleness": {"count": 0, "mean": 0.0, "max": 0,
+                          "p50": 0, "p95": 0, "p99": 0},
+            "queue_depth": {"work_mean": 0.0, "batch_mean": 0.0},
             "resumed_from": start if start else None,
             "preempted_at": preempted_at,
+            # Uniform snapshot/checkpoint schema with async mode: here
+            # every save blocks the loop, so count == saved and the
+            # pause histogram holds whole save latencies.
+            "snapshot": {
+                "count": pause["count"],
+                "saved": pause["count"],
+                "pause_us_mean": pause["mean"],
+                "pause_us_max": pause["max"],
+                "drain_cycles": 0,
+            },
+            "checkpoint": self._checkpoint_metrics(snap, manager),
         }
         return RunResult(params=state.params,
                          target_params=state.target_params,
                          buffer=state.buffer, metrics=metrics)
+
+    @staticmethod
+    def _checkpoint_metrics(snap: obs.Snapshot, manager) -> dict:
+        """Checkpoint overhead view shared by both modes (zeros when the
+        run had no manager)."""
+        save = _hstats(snap, "span_checkpoint_save_ms")
+        return {
+            "saves": save["count"],
+            "save_ms_mean": save["mean"],
+            "save_ms_max": save["max"],
+            "full_bytes": _cval(snap, "checkpoint_full_bytes"),
+            "delta_bytes": _cval(snap, "checkpoint_delta_bytes"),
+            "chain_len": (manager._chain_len if manager is not None else 0),
+        }
 
     def _sync_dirty(self, state, marks: dict, t0: int, t1: int):
         """Dirty tree for the sync snapshot covering steps ``[t0, t1)``.
@@ -375,8 +536,8 @@ class ReplayService:
     # --- asynchronous mode -------------------------------------------- #
 
     def _run_async(self, key: jax.Array, n_steps: int,
-                   manager: ckpt_mod.CheckpointManager | None = None
-                   ) -> RunResult:
+                   manager: ckpt_mod.CheckpointManager | None,
+                   tel: _RunTelemetry) -> RunResult:
         cfg = self.cfg
         start_steps, prefetch_draw, frames0, blocks0 = 0, 0, 0, 0
         actor_resume = None
@@ -417,21 +578,22 @@ class ReplayService:
         batch_q: queue.Queue = queue.Queue(self.prefetch_depth)
         stop = threading.Event()
         self._fb_rows = collections.deque() if manager is not None else None
-        # Running aggregates, bounded regardless of run length; the exact
-        # per-batch sequence trace is opt-in via feedback_log.
+        # The rec dict is the CONTROL PLANE: counters the COW snapshot
+        # consistency contract and the replay-ratio budget read (the
+        # publish-state-before-bump ordering in _replay_loop depends on
+        # them staying plain same-thread ints).  Pure observability
+        # aggregates (staleness, queue depths, snapshot pauses) live in
+        # the telemetry registry's lock-free instruments instead.
         rec = {"frames": 0, "blocks": 0,
                "fb_enqueued": 0, "fb_applied": 0,
                "feedback_seqs": [] if self.feedback_log else None,
-               "stale_n": 0, "stale_sum": 0, "stale_max": 0,
-               "returns": collections.deque(maxlen=256),
-               "depth_n": 0, "work_sum": 0, "batch_sum": 0, "error": None,
-               "snapshots": 0, "snap_pause_us_sum": 0.0,
-               "snap_pause_us_max": 0.0}
+               "returns": collections.deque(maxlen=256), "error": None}
 
         def feedback_put(fb):
             ok = put_with_stop(work_q, ("feedback", fb), stop)
             if ok:
                 rec["fb_enqueued"] += 1
+                tel.fb_enqueued.add()
             return ok
 
         last_saved = [start_steps]
@@ -461,7 +623,7 @@ class ReplayService:
             start_steps=start_steps, on_slab=on_slab)
         replay_thread = threading.Thread(
             target=self._replay_loop, name="replay-core",
-            args=(work_q, batch_q, stop, learner, rec), daemon=True)
+            args=(work_q, batch_q, stop, learner, rec, tel), daemon=True)
         budget_fn = None
         if self.max_replay_ratio is not None:
             ratio, head = self.max_replay_ratio, self.min_size
@@ -482,11 +644,14 @@ class ReplayService:
             out_q=batch_q, stop=stop, base_key=key, slab=self.slab,
             min_size=self.min_size, device=self.device,
             beta_fn=self.dqn.beta_at,
-            start_draw=prefetch_draw, start_seq=start_steps)
+            start_draw=prefetch_draw, start_seq=start_steps,
+            probe=tel.probe_hook(self.dqn.replay.sampler,
+                                 self.cfg.batch * self.slab),
+            probe_every=tel.spec.probe_every)
         if manager is not None:
             snapper = _CowSnapshotter(self, manager, pool, prefetch, key,
                                       rec, frames0, blocks0,
-                                      resume_marks=resume_marks)
+                                      resume_marks=resume_marks, tel=tel)
 
         def shutdown():
             stop.set()
@@ -542,6 +707,11 @@ class ReplayService:
                       if learner.first_step_time else float("nan"))
         wall = t_end - t0
         returns = np.asarray(rec["returns"])
+        snap = tel.diff()
+        stale = _hstats(snap, "staleness_steps")
+        workd = _hstats(snap, "work_queue_depth")
+        batchd = _hstats(snap, "batch_queue_depth")
+        pause = _hstats(snap, "snapshot_pause_us")
         metrics = {
             "mode": "async",
             "learner_steps": learner.steps_done - start_steps,
@@ -566,17 +736,20 @@ class ReplayService:
                      else float(self.dqn.beta_at(
                          max(learner.steps_done - 1, 0)))),
             "feedback_seqs": rec["feedback_seqs"],
+            # Compatibility view over the registry's staleness histogram:
+            # count/sum are exact, max is exact, and the INT_BUCKETS
+            # bounds make the percentiles exact for staleness <= 64.
             "staleness": {
-                "count": rec["stale_n"],
-                "mean": (rec["stale_sum"] / rec["stale_n"]
-                         if rec["stale_n"] else 0.0),
-                "max": rec["stale_max"],
+                "count": stale["count"],
+                "mean": stale["mean"],
+                "max": int(stale["max"]),
+                "p50": int(stale["p50"]),
+                "p95": int(stale["p95"]),
+                "p99": int(stale["p99"]),
             },
             "queue_depth": {
-                "work_mean": (rec["work_sum"] / rec["depth_n"]
-                              if rec["depth_n"] else 0.0),
-                "batch_mean": (rec["batch_sum"] / rec["depth_n"]
-                               if rec["depth_n"] else 0.0),
+                "work_mean": workd["mean"],
+                "batch_mean": batchd["mean"],
             },
             "losses": [float(l) for l in learner.losses],
             "resumed_from": start_steps if start_steps else None,
@@ -588,14 +761,22 @@ class ReplayService:
             # structurally zero since the COW rework, kept as a column
             # so the benchmark trajectory records the regime change.
             "snapshot": {
-                "count": rec["snapshots"],
+                "count": pause["count"],
                 "saved": snapper.saved if snapper is not None else 0,
-                "pause_us_mean": (rec["snap_pause_us_sum"]
-                                  / max(rec["snapshots"], 1)),
-                "pause_us_max": rec["snap_pause_us_max"],
+                "pause_us_mean": pause["mean"],
+                "pause_us_max": pause["max"],
                 "drain_cycles": 0,
             },
+            "checkpoint": self._checkpoint_metrics(snap, manager),
         }
+        if tel.health is not None:
+            metrics["health"] = {
+                "kl_nats": tel.health.monitor.kl(),
+                "chi2": tel.health.monitor.chi_square(),
+                "csp_occupancy": _cval(snap, "csp_occupancy"),
+                "fallback_draws": _cval(snap, "fallback_draws"),
+                "probe_draws": _cval(snap, "probe_draws"),
+            }
         return RunResult(params=params, target_params=target_params,
                          buffer=self._bstate, metrics=metrics)
 
@@ -634,7 +815,7 @@ class ReplayService:
 
     def _replay_loop(self, work_q: queue.Queue, batch_q: queue.Queue,
                      stop: threading.Event, learner: Learner,
-                     rec: dict) -> None:
+                     rec: dict, tel: _RunTelemetry) -> None:
         """The one owner of the canonical replay state: applies transition
         blocks and deferred priority feedback in arrival order, publishes
         immutable snapshots for the prefetcher.  Each publish REPLACES
@@ -656,11 +837,14 @@ class ReplayService:
                 # self._bstate already contains the counted item.
                 if tag == "block":
                     if item.transitions is not None:  # None: all rows fell
-                        bstate = self._add_block(      # in n-step warm-up
-                            bstate, item.transitions)
+                        with obs.span("add_block"):    # in n-step warm-up
+                            bstate = self._add_block(bstate,
+                                                     item.transitions)
                         self._bstate = bstate
                     rec["frames"] += item.frames
                     rec["blocks"] += 1
+                    tel.frames.add(item.frames)
+                    tel.blocks.add()
                     rec["returns"].extend(item.completed_returns.tolist())
                 else:  # deferred priority feedback (one slab, S batches)
                     fb: Feedback = item
@@ -675,21 +859,21 @@ class ReplayService:
                         # identical bytes.
                         self._fb_rows.append(
                             (rec["fb_applied"], np.asarray(fb.idx).ravel()))
-                    bstate = self._apply_feedback(
-                        bstate, fb.idx, fb.td, fb.stamp)
+                    with obs.span("apply_feedback"):
+                        bstate = self._apply_feedback(
+                            bstate, fb.idx, fb.td, fb.stamp)
                     self._bstate = bstate
                     s = int(fb.idx.shape[0])
                     if rec["feedback_seqs"] is not None:
                         rec["feedback_seqs"].extend(
                             range(fb.seq0, fb.seq0 + s))
-                    stale = learner.steps_done - fb.version
-                    rec["stale_n"] += s
-                    rec["stale_sum"] += stale * s
-                    rec["stale_max"] = max(rec["stale_max"], stale)
+                    # The slab's S batches share one staleness value.
+                    tel.staleness.observe_n(
+                        learner.steps_done - fb.version, s)
                     rec["fb_applied"] += 1
-                rec["depth_n"] += 1
-                rec["work_sum"] += work_q.qsize()
-                rec["batch_sum"] += batch_q.qsize()
+                    tel.fb_applied.add()
+                tel.work_depth.observe(work_q.qsize())
+                tel.batch_depth.observe(batch_q.qsize())
         except BaseException as e:
             rec["error"] = e
             stop.set()
@@ -725,13 +909,15 @@ class _CowSnapshotter:
 
     def __init__(self, service: ReplayService, manager, pool, prefetch,
                  key, rec: dict, frames0: int, blocks0: int,
-                 resume_marks: dict | None = None):
+                 resume_marks: dict | None = None,
+                 tel: _RunTelemetry | None = None):
         self._svc = service
         self._manager = manager
         self._pool = pool
         self._prefetch = prefetch
         self._key = key
         self._rec = rec
+        self._tel = tel
         self._frames0 = frames0
         self._blocks0 = blocks0
         # Watermarks of the last successful on-disk save (None -> the
@@ -783,9 +969,8 @@ class _CowSnapshotter:
         # below wakes the worker, whose overlapped serialization shows
         # up in the benchmark's wall-overhead column, not here.
         pause_us = (time.perf_counter() - t0) * 1e6
-        rec["snapshots"] += 1
-        rec["snap_pause_us_sum"] += pause_us
-        rec["snap_pause_us_max"] = max(rec["snap_pause_us_max"], pause_us)
+        if self._tel is not None:
+            self._tel.snap_pause.observe(pause_us)
         self._busy.set()
         self._q.put((int(steps), snap, meta, a_now))
         return True
@@ -814,6 +999,9 @@ class _CowSnapshotter:
                 self._manager.save(steps, snap, meta=meta, dirty=dirty)
                 self.marks = next_marks
                 self.saved += 1
+                if self._tel is not None:
+                    self._tel.event("checkpoint", step=steps,
+                                    delta=dirty is not None)
                 # Entries older than the new watermark can never be
                 # dirty again — prune (popleft racing the replay
                 # thread's append is deque-safe).

@@ -669,21 +669,37 @@ class CheckpointManager:
         every ``full_every`` saves so restore never replays an unbounded
         chain.
         """
+        from repro import obs  # deferred: keep the train layer import-light
+
         base = self._last_step
         full = (force_full or dirty is None or base is None
                 or base >= step
                 or self._chain_len >= self.full_every - 1
                 or not checkpoint_exists(self.directory, base))
-        if full:
-            path = save_incremental(self.directory, step, tree, meta=meta)
-            self._chain_len = 0
-            self._bases[step] = None
-        else:
-            path = save_incremental(self.directory, step, tree,
-                                    base_step=base, dirty=dirty, meta=meta)
-            self._chain_len += 1
-            self._bases[step] = base
+        with obs.span("checkpoint_save"):
+            if full:
+                path = save_incremental(self.directory, step, tree, meta=meta)
+                self._chain_len = 0
+                self._bases[step] = None
+            else:
+                path = save_incremental(self.directory, step, tree,
+                                        base_step=base, dirty=dirty, meta=meta)
+                self._chain_len += 1
+                self._bases[step] = base
         self._last_step = step
+        reg = obs.get_registry()
+        if reg.enabled:
+            try:
+                nbytes = os.path.getsize(path)
+            except OSError:
+                nbytes = 0
+            reg.counter(
+                "checkpoint_full_bytes" if full else "checkpoint_delta_bytes",
+                help="bytes written by full/delta checkpoint saves",
+            ).add(nbytes)
+            reg.gauge("checkpoint_chain_len",
+                      help="delta-chain length since the last full save"
+                      ).set(self._chain_len)
         self._gc()
         return path
 
