@@ -12,89 +12,25 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.extend.core as jex_core
 import jax.numpy as jnp
 
 import repro.core.quantize as qz
 from benchmarks.common import csv_row, time_fn
 from repro.core.amper import AmperConfig, AmperSampler
 from repro.core.hwmodel import HwConfig, latency_fr_ns
-from repro.kernels.common import force_interpret
 from repro.core.per import CumsumPER, SumTreePER
 
-BATCH = 64
-CSP_RATIO = 0.15
-
-
-# Pointwise / layout primitives XLA reliably fuses into a neighbouring
-# kernel: they do not launch dispatches of their own.  Everything NOT in
-# this set (RNG, reductions, cumsum, sort, gather/scatter, dot,
-# pallas_call, ...) is charged as one dispatch.
-_FUSIBLE = frozenset({
-    "add", "sub", "mul", "div", "rem", "neg", "abs", "sign", "max", "min",
-    "and", "or", "xor", "not", "shift_left", "shift_right_logical",
-    "shift_right_arithmetic", "integer_pow", "pow", "exp", "log", "sqrt",
-    "rsqrt", "floor", "ceil", "round", "clamp", "is_finite",
-    "lt", "le", "gt", "ge", "eq", "ne", "select_n", "convert_element_type",
-    "broadcast_in_dim", "reshape", "squeeze", "slice", "pad", "transpose",
-    "iota", "stop_gradient", "copy",
-})
-
-
-def _sub_jaxprs(params):
-    """Yield every Jaxpr nested in an equation's params (pjit, scan, cond...)."""
-    for v in params.values():
-        leaves = v if isinstance(v, (tuple, list)) else (v,)
-        for leaf in leaves:
-            if isinstance(leaf, jex_core.ClosedJaxpr):
-                yield leaf.jaxpr
-            elif isinstance(leaf, jex_core.Jaxpr):
-                yield leaf
-
-
-def _count_eqns(jaxpr) -> tuple[int, int]:
-    """Recursive (total_eqns, launch_eqns) over a jaxpr.
-
-    ``pallas_call`` counts as ONE launch regardless of its inner body —
-    that is the whole point of fusing — while structured control flow
-    (pjit/scan/cond/while) is charged the cost of its sub-jaxpr instead
-    of 1.  ``launch_eqns`` excludes the ``_FUSIBLE`` pointwise/layout
-    chaff that XLA folds into neighbouring kernels, so it approximates
-    kernel launches per draw; ``total_eqns`` is the raw count.
-    """
-    total = launches = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            total += 1
-            launches += 1
-            continue
-        subs = list(_sub_jaxprs(eqn.params))
-        if subs:
-            for s in subs:
-                t, l = _count_eqns(s)
-                total += t
-                launches += l
-        else:
-            total += 1
-            launches += eqn.primitive.name not in _FUSIBLE
-    return total, launches
-
-
-def dispatch_count(fn, *args) -> tuple[int, int]:
-    """(total_eqns, launch_eqns) traced for ``fn(*args)``, fused kernel = 1.
-
-    Traced under ``force_interpret(False)`` so the count reflects the real
-    TPU lowering (one ``pallas_call``) even on a CPU host — tracing never
-    executes the kernel, so this is safe off-TPU.
-
-    The override is invisible to jax's global trace cache (keyed on
-    function identity + avals), so the poisoned-for-CPU jaxpr traced here
-    must not leak into later executions: caches are cleared on exit.
-    """
-    with force_interpret(False):
-        closed = jax.make_jaxpr(fn)(*args)
-    jax.clear_caches()
-    return _count_eqns(closed.jaxpr)
+# The fusion-aware jaxpr dispatch counter lives in the analysis package
+# now (it is also the DISPATCH-BUDGET gate); re-exported here so the
+# benchmark and its existing importers (tests/test_obs.py) keep working.
+from repro.analysis.jaxpr_lint import (  # noqa: F401
+    BATCH,
+    CSP_RATIO,
+    FUSIBLE as _FUSIBLE,
+    count_eqns as _count_eqns,
+    dispatch_count,
+    sub_jaxprs as _sub_jaxprs,
+)
 
 
 def run(sizes=(10_000, 100_000, 1_000_000), verbose: bool = True):

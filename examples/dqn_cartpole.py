@@ -44,10 +44,10 @@ for sampler in ("uniform", "per-sumtree", "amper-k", "amper-fr"):
     key = jax.random.key(args.seed)
     # AOT-compile so trace/compile cost stays out of the frames/s column
     train_c = dqn.train.lower(key, args.steps).compile()
-    t0 = time.time()
+    t0 = time.perf_counter()
     state, metrics = train_c(key)
     jax.block_until_ready(state)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     test = float(dqn.evaluate(state, jax.random.key(args.seed + 100), 10))
     print(f"{sampler:14s} {float(metrics['return_mean'][-1]):14.1f} "
           f"{test:11.1f} {dt:6.1f} {frames / dt:9.0f}")

@@ -1,0 +1,34 @@
+"""Static analysis for the replay fabric (``python -m repro.analysis``).
+
+Three layers, one findings model (:mod:`repro.analysis.findings`):
+
+* :mod:`repro.analysis.lint` — AST lint over source text (PRNG key
+  reuse, wall-clock duration math, host syncs under jit, use after
+  donation, traced-parameter branching).
+* :mod:`repro.analysis.jaxpr_lint` — import-and-trace checks (dispatch
+  budget vs ``BENCH_sampling.json``, slab-path recompiles, 64-bit /
+  weak-type promotion).
+* :mod:`repro.analysis.locks` — lockdep: lock-order-graph recording and
+  cycle (potential-deadlock) detection, online or from a JSONL log.
+
+Import cost matters: the runtime imports :mod:`repro.analysis.locks`
+for its instrumentation hooks, so this package ``__init__`` must stay
+free of jax and of the heavier layers (they are imported lazily by the
+CLI).
+"""
+from repro.analysis.findings import Baseline, Finding  # noqa: F401
+
+# Every rule any layer can emit — the prom exporter materializes these
+# at 0 so dashboards keep a stable series set on clean runs.
+ALL_RULES = (
+    "PRNG-REUSE",
+    "WALL-CLOCK",
+    "HOST-SYNC",
+    "DONATED-USE",
+    "TRACED-BRANCH",
+    "PARSE-ERROR",
+    "DISPATCH-BUDGET",
+    "RECOMPILE",
+    "DTYPE-WIDE",
+    "LOCK-ORDER",
+)

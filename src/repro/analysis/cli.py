@@ -1,0 +1,148 @@
+"""``python -m repro.analysis`` — the gate the CI job runs.
+
+Exit codes: 0 = clean (after noqa + baseline suppression), 1 = findings,
+2 = usage/configuration error.
+
+Typical invocations::
+
+    python -m repro.analysis src tests benchmarks \
+        --baseline analysis-baseline.json        # the CI gate
+    python -m repro.analysis src --no-trace      # fast AST-only pass
+    python -m repro.analysis --write-baseline analysis-baseline.json \
+        src tests benchmarks                     # accept current findings
+    python -m repro.analysis --dead-modules      # unreferenced-module report
+    python -m repro.analysis --lock-log run.jsonl  # offline lockdep
+    python -m repro.analysis src --format prom   # dashboards
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis.findings import Baseline, Finding, findings_json
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="JAX/concurrency static analysis for the replay fabric")
+    p.add_argument("paths", nargs="*",
+                   help="files or directories to lint (e.g. src tests "
+                        "benchmarks)")
+    p.add_argument("--baseline", metavar="JSON",
+                   help="committed baseline of accepted findings to subtract")
+    p.add_argument("--write-baseline", metavar="JSON",
+                   help="write current findings as the new baseline and exit 0")
+    p.add_argument("--out", metavar="JSON",
+                   help="also write the machine-readable findings JSON here")
+    p.add_argument("--format", choices=("text", "json", "prom"),
+                   default="text", help="stdout format (default: text)")
+    p.add_argument("--no-trace", action="store_true",
+                   help="skip the import-and-trace layer (dispatch budget, "
+                        "recompile, dtype) — AST lint only")
+    p.add_argument("--bench", metavar="JSON",
+                   help="dispatch-budget source (default: BENCH_sampling.json)")
+    p.add_argument("--dead-modules", action="store_true",
+                   help="print the unreferenced-module report and exit "
+                        "(report only, never fails)")
+    p.add_argument("--lock-log", metavar="JSONL",
+                   help="offline lockdep: check a recorded acquisition log "
+                        "for lock-order cycles")
+    return p
+
+
+def _emit_prom(findings: list[Finding]) -> str:
+    """Per-rule finding counts in the obs Prometheus text format, so the
+    analysis gate lands on the same dashboards as the runtime metrics."""
+    from repro.obs.exporters import prometheus_text
+    from repro.obs.metrics import Registry
+
+    reg = Registry(enabled=True)
+    from collections import Counter as _Counter
+
+    counts = _Counter(f.rule for f in findings)
+    # Materialize every known rule at 0 so dashboards see a stable
+    # series set whether or not the run was clean.
+    from repro.analysis import ALL_RULES
+
+    for rule in sorted(set(ALL_RULES) | set(counts)):
+        c = reg.counter(
+            "analysis.findings." + rule.lower().replace("-", "_"),
+            help=f"non-suppressed {rule} findings in the last analysis run")
+        for _ in range(counts.get(rule, 0)):
+            c.add()
+    return prometheus_text(reg)
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.dead_modules:
+        from repro.analysis.deadcode import dead_module_report, render_report
+
+        src_root = args.paths[0] if args.paths else "src"
+        print(render_report(dead_module_report(src_root)))
+        return 0
+
+    findings: list[Finding] = []
+
+    if args.lock_log:
+        from repro.analysis.locks import check_log
+
+        try:
+            findings.extend(check_log(args.lock_log))
+        except OSError as e:
+            print(f"error: cannot read lock log: {e}", file=sys.stderr)
+            return 2
+
+    if args.paths:
+        from repro.analysis.lint import run_lint
+
+        findings.extend(run_lint(args.paths))
+        if not args.no_trace:
+            from repro.analysis.jaxpr_lint import run_trace_checks
+
+            findings.extend(run_trace_checks(args.bench))
+    elif not args.lock_log:
+        print("error: no paths given (and no --lock-log/--dead-modules)",
+              file=sys.stderr)
+        return 2
+
+    if args.write_baseline:
+        Baseline.from_findings(findings).save(args.write_baseline)
+        print(f"wrote baseline with {len(findings)} finding(s) to "
+              f"{args.write_baseline}")
+        return 0
+
+    suppressed = 0
+    if args.baseline:
+        try:
+            bl = Baseline.load(args.baseline)
+        except (OSError, ValueError, KeyError) as e:
+            print(f"error: cannot load baseline: {e}", file=sys.stderr)
+            return 2
+        kept = bl.filter(findings)
+        suppressed = len(findings) - len(kept)
+        findings = kept
+
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    payload = findings_json(findings, suppressed=suppressed)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(payload, f, indent=1)
+            f.write("\n")
+
+    if args.format == "json":
+        print(json.dumps(payload, indent=1))
+    elif args.format == "prom":
+        sys.stdout.write(_emit_prom(findings))
+    else:
+        for f in findings:
+            print(f.render())
+        print(f"{len(findings)} finding(s), {suppressed} baselined")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":  # pragma: no cover
+    sys.exit(main())

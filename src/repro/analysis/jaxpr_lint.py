@@ -1,0 +1,339 @@
+"""Layer 2: import-and-trace checkers over the live library.
+
+Where :mod:`repro.analysis.lint` reads source text, this layer imports
+the replay fabric and *traces* its hot paths, checking properties only
+visible in the jaxpr:
+
+* ``DISPATCH-BUDGET`` — the fused AMPER-fr draw must stay within the
+  dispatch count committed in ``BENCH_sampling.json``.  The counter is
+  the fusion-aware jaxpr-equation count (``pallas_call`` = 1 launch,
+  pointwise/layout chaff fused away) that the sampling benchmark and
+  the telemetry dispatch guard both use — it moved here so the analysis
+  gate, ``benchmarks/bench_samplers.py`` and ``tests/test_obs.py`` are
+  one implementation.
+* ``RECOMPILE`` — the slab-prefetch path must compile ONCE and be
+  reused across draws: evolving buffer contents, annealed β values and
+  advancing PRNG keys are value changes, not signature changes.  A
+  python scalar threaded into the call signature (or a dtype flip)
+  silently retraces per step, which is exactly the regression this
+  catches.
+* ``DTYPE-WIDE`` — no float64/int64 avals and no weak-typed public
+  outputs anywhere in the ``core/`` sampler traces (weak outputs cause
+  silent downstream retraces; 64-bit leaks double the paper's bandwidth
+  story).
+
+All checks trace under ``force_interpret(False)`` so the counted
+lowering is the real TPU one (one ``pallas_call``) even on a CPU host;
+tracing never executes the kernel, and jax's caches are cleared after,
+exactly as ``dispatch_count`` has always done.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.extend.core as jex_core
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding
+
+# Batch/CSP-ratio of the committed budget rows (kept in lockstep with
+# benchmarks/bench_samplers.py, which imports them from here).
+BATCH = 64
+CSP_RATIO = 0.15
+BUDGET_ROW = "fr-fused/n10000"
+
+# Pointwise / layout primitives XLA reliably fuses into a neighbouring
+# kernel: they do not launch dispatches of their own.  Everything NOT in
+# this set (RNG, reductions, cumsum, sort, gather/scatter, dot,
+# pallas_call, ...) is charged as one dispatch.
+FUSIBLE = frozenset({
+    "add", "sub", "mul", "div", "rem", "neg", "abs", "sign", "max", "min",
+    "and", "or", "xor", "not", "shift_left", "shift_right_logical",
+    "shift_right_arithmetic", "integer_pow", "pow", "exp", "log", "sqrt",
+    "rsqrt", "floor", "ceil", "round", "clamp", "is_finite",
+    "lt", "le", "gt", "ge", "eq", "ne", "select_n", "convert_element_type",
+    "broadcast_in_dim", "reshape", "squeeze", "slice", "pad", "transpose",
+    "iota", "stop_gradient", "copy",
+})
+
+
+def sub_jaxprs(params):
+    """Yield every Jaxpr nested in an equation's params (pjit, scan, cond...)."""
+    for v in params.values():
+        leaves = v if isinstance(v, (tuple, list)) else (v,)
+        for leaf in leaves:
+            if isinstance(leaf, jex_core.ClosedJaxpr):
+                yield leaf.jaxpr
+            elif isinstance(leaf, jex_core.Jaxpr):
+                yield leaf
+
+
+def count_eqns(jaxpr) -> tuple[int, int]:
+    """Recursive (total_eqns, launch_eqns) over a jaxpr.
+
+    ``pallas_call`` counts as ONE launch regardless of its inner body —
+    that is the whole point of fusing — while structured control flow
+    (pjit/scan/cond/while) is charged the cost of its sub-jaxpr instead
+    of 1.  ``launch_eqns`` excludes the ``FUSIBLE`` pointwise/layout
+    chaff that XLA folds into neighbouring kernels, so it approximates
+    kernel launches per draw; ``total_eqns`` is the raw count.
+    """
+    total = launches = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            total += 1
+            launches += 1
+            continue
+        subs = list(sub_jaxprs(eqn.params))
+        if subs:
+            for s in subs:
+                t, l = count_eqns(s)
+                total += t
+                launches += l
+        else:
+            total += 1
+            launches += eqn.primitive.name not in FUSIBLE
+    return total, launches
+
+
+def dispatch_count(fn, *args) -> tuple[int, int]:
+    """(total_eqns, launch_eqns) traced for ``fn(*args)``, fused kernel = 1.
+
+    Traced under ``force_interpret(False)`` so the count reflects the real
+    TPU lowering (one ``pallas_call``) even on a CPU host — tracing never
+    executes the kernel, so this is safe off-TPU.
+
+    The override is invisible to jax's global trace cache (keyed on
+    function identity + avals), so the poisoned-for-CPU jaxpr traced here
+    must not leak into later executions: caches are cleared on exit.
+    """
+    from repro.kernels.common import force_interpret
+
+    with force_interpret(False):
+        closed = jax.make_jaxpr(fn)(*args)
+    jax.clear_caches()
+    return count_eqns(closed.jaxpr)
+
+
+# --------------------------------------------------------------------- #
+# DISPATCH-BUDGET
+# --------------------------------------------------------------------- #
+
+def default_bench_path() -> str:
+    """The committed budget file at the repo root (cwd-first so the CI
+    job and a repo-root shell both resolve the committed copy)."""
+    for cand in ("BENCH_sampling.json",
+                 os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                              "BENCH_sampling.json")):
+        if os.path.exists(cand):
+            return cand
+    return "BENCH_sampling.json"
+
+
+def budget_from_bench(bench_path: str, row_name: str = BUDGET_ROW) -> int:
+    """The committed dispatches-per-draw budget for ``row_name``."""
+    with open(bench_path) as f:
+        bench = json.load(f)
+    row = next(r for r in bench["rows"] if r[0] == row_name)
+    derived = dict(kv.split("=") for kv in row[2].split())
+    return int(derived["dispatches"])
+
+
+def _fused_sampler(n: int):
+    from repro.core.amper import AmperConfig, AmperSampler
+
+    cfg = AmperConfig(capacity=n, m=20, lam_fr=2.0, v_max=1.0,
+                      csp_capacity=max(int(n * CSP_RATIO), BATCH),
+                      fr_mode="fused")
+    amp = AmperSampler(cfg, "fr")
+    prio = jax.random.uniform(jax.random.key(0), (n,)) + 0.01
+    state = amp.update(amp.init(), jnp.arange(n), prio)
+    return amp, state
+
+
+def check_dispatch_budget(bench_path: str | None = None, *,
+                          n: int = 10_000) -> list[Finding]:
+    """Trace the fused AMPER-fr draw and compare against the committed
+    budget.  Over budget = a fusion regression on the paper's 55-270x
+    hot path; under budget = an improvement the baseline should absorb
+    (flagged too, so the committed number stays honest)."""
+    bench_path = bench_path or default_bench_path()
+    try:
+        budget = budget_from_bench(bench_path)
+    except (OSError, StopIteration, KeyError, ValueError) as e:
+        return [Finding(
+            rule="DISPATCH-BUDGET", path="<trace:amper-fr-fused>", line=0,
+            message=f"cannot read committed budget from {bench_path}: {e}")]
+    amp, state = _fused_sampler(n)
+    key = jax.random.key(1)
+    _, dispatches = dispatch_count(
+        lambda s, k, a=amp: a.sample(s, k, BATCH), state, key)
+    if dispatches > budget:
+        return [Finding(
+            rule="DISPATCH-BUDGET", path="<trace:amper-fr-fused>", line=0,
+            message=f"fused AMPER-fr draw traces to {dispatches} dispatches,"
+                    f" over the committed budget of {budget} "
+                    f"({BUDGET_ROW} in BENCH_sampling.json)")]
+    if dispatches < budget:
+        return [Finding(
+            rule="DISPATCH-BUDGET", path="<trace:amper-fr-fused>", line=0,
+            message=f"fused AMPER-fr draw now traces to {dispatches} "
+                    f"dispatches, BELOW the committed {budget} — re-run "
+                    f"the sampling benchmark and commit the new "
+                    f"BENCH_sampling.json")]
+    return []
+
+
+# --------------------------------------------------------------------- #
+# RECOMPILE
+# --------------------------------------------------------------------- #
+
+def trace_cache_entries(jit_fn, calls) -> int:
+    """Invoke ``jit_fn`` over every argument tuple in ``calls`` and
+    return how many distinct traces the jit cache holds afterwards."""
+    for args in calls:
+        jax.block_until_ready(jit_fn(*args))
+    return int(jit_fn._cache_size())
+
+
+def check_recompile() -> list[Finding]:
+    """Drive the slab-prefetch draw exactly as the async service does —
+    evolving buffer state, annealed β, advancing draw keys — and require
+    ONE compiled trace to serve every call."""
+    from repro.core.replay_buffer import ReplayBuffer
+    from repro.core.samplers import make_sampler
+    from repro.runtime import prng
+    from repro.runtime.pipeline import make_slab_sampler
+
+    capacity, batch, slab = 128, 8, 2
+    rb = ReplayBuffer(capacity, make_sampler("amper-fr", capacity))
+    tr = {"obs": jnp.zeros((4,), jnp.float32),
+          "action": jnp.int32(0), "reward": jnp.float32(0.0),
+          "next_obs": jnp.zeros((4,), jnp.float32),
+          "done": jnp.float32(0.0)}
+    state = rb.init(tr)
+    fill = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (capacity // 2,) + jnp.shape(x)), tr)
+    state = rb.add_batch(state, fill)
+    sample = jax.jit(make_slab_sampler(rb, batch, slab))
+    key = jax.random.key(0)
+
+    findings = []
+    # The β-annealed steady state: new key, new β VALUE, evolving state
+    # each draw — one signature, one trace.
+    states = [state, rb.add_batch(state, fill),
+              rb.update_priorities(state, jnp.arange(8),
+                                   jnp.linspace(0.1, 1.0, 8))]
+    calls = [(s, prng.sample_key(key, d), jnp.float32(0.4 + 0.1 * d))
+             for d, s in enumerate(states)]
+    n = trace_cache_entries(sample, calls)
+    if n != 1:
+        findings.append(Finding(
+            rule="RECOMPILE", path="<trace:slab-prefetch>", line=0,
+            message=f"slab draw retraced across draws: {n} cache entries "
+                    f"for {len(calls)} identical-signature calls (a "
+                    f"python scalar or dtype flip in the call signature "
+                    f"recompiles per step)"))
+    # The β=None constant-β mode is a second *intended* signature (a
+    # leafless pytree); it must add exactly one more trace, not one per
+    # call.
+    none_calls = [(states[0], prng.sample_key(key, 7), None),
+                  (states[1], prng.sample_key(key, 8), None)]
+    n2 = trace_cache_entries(sample, none_calls)
+    if n2 > 2:
+        findings.append(Finding(
+            rule="RECOMPILE", path="<trace:slab-prefetch>", line=0,
+            message=f"constant-β slab draw retraced: {n2} cache entries "
+                    f"(expected 2: one annealed-β trace + one β=None "
+                    f"trace)"))
+    jax.clear_caches()
+    return findings
+
+
+# --------------------------------------------------------------------- #
+# DTYPE-WIDE
+# --------------------------------------------------------------------- #
+
+_WIDE = {jnp.dtype("float64"), jnp.dtype("int64"), jnp.dtype("uint64"),
+         jnp.dtype("complex128")}
+
+
+def scan_jaxpr_dtypes(jaxpr, label: str) -> list[Finding]:
+    """Flag any 64-bit aval produced anywhere inside ``jaxpr``."""
+    findings = []
+    seen = set()
+    def walk(jx):
+        for eqn in jx.eqns:
+            for var in eqn.outvars:
+                aval = getattr(var, "aval", None)
+                dt = getattr(aval, "dtype", None)
+                try:
+                    wide = dt is not None and jnp.dtype(dt) in _WIDE
+                except TypeError:  # extended dtypes (key<fry>) have no np dtype
+                    wide = False
+                if wide:
+                    k = (eqn.primitive.name, str(dt))
+                    if k not in seen:
+                        seen.add(k)
+                        findings.append(Finding(
+                            rule="DTYPE-WIDE", path=f"<trace:{label}>",
+                            line=0,
+                            message=f"{eqn.primitive.name} produces {dt} "
+                                    f"inside {label}: 64-bit promotion on "
+                                    f"the hot path"))
+            for s in sub_jaxprs(eqn.params):
+                walk(s)
+    walk(jaxpr)
+    return findings
+
+
+def _weak_outputs(closed, label: str) -> list[Finding]:
+    findings = []
+    for i, aval in enumerate(closed.out_avals):
+        if getattr(aval, "weak_type", False):
+            findings.append(Finding(
+                rule="DTYPE-WIDE", path=f"<trace:{label}>", line=0,
+                message=f"output {i} of {label} is weak-typed "
+                        f"({aval.dtype}): downstream jits retrace when a "
+                        f"strongly-typed value arrives instead"))
+    return findings
+
+
+def check_dtype_promotion(
+        kinds=("per-cumsum", "per-sumtree", "amper-fr", "amper-k"),
+        capacity: int = 256, batch: int = 16) -> list[Finding]:
+    """Trace every registry sampler's sample+update in ``core/`` (the
+    fused path covers ``kernels/``) and flag 64-bit avals and weak-typed
+    public outputs."""
+    from repro.core.samplers import make_sampler
+    from repro.kernels.common import force_interpret
+
+    findings = []
+    key = jax.random.key(0)
+    for i, kind in enumerate(kinds):
+        k_fill = jax.random.fold_in(key, i)
+        sampler = make_sampler(kind, capacity)
+        state = sampler.update(
+            sampler.init(), jnp.arange(capacity),
+            jax.random.uniform(k_fill, (capacity,)) + 0.01)
+        idx = jnp.arange(batch, dtype=jnp.int32)
+        prio = jnp.linspace(0.1, 1.0, batch)
+        with force_interpret(False):
+            c_sample = jax.make_jaxpr(
+                lambda s, k: sampler.sample(s, k, batch))(state, key)
+            c_update = jax.make_jaxpr(sampler.update)(state, idx, prio)
+        jax.clear_caches()
+        for label, closed in ((f"{kind}.sample", c_sample),
+                              (f"{kind}.update", c_update)):
+            findings.extend(scan_jaxpr_dtypes(closed.jaxpr, label))
+            findings.extend(_weak_outputs(closed, label))
+    return findings
+
+
+def run_trace_checks(bench_path: str | None = None) -> list[Finding]:
+    """All layer-2 checks (the CLI's ``--no-trace`` skips these)."""
+    return (check_dispatch_budget(bench_path)
+            + check_recompile()
+            + check_dtype_promotion())

@@ -1,0 +1,558 @@
+"""Layer 1: AST lint rules tuned to this codebase's hazard classes.
+
+Every rule encodes a bug class that actually shipped (or nearly shipped)
+in this repo's history:
+
+* ``PRNG-REUSE`` — a PRNG key consumed by two ``jax.random.*`` calls
+  without an intervening ``split``/reassignment (the PR 1/PR 2 bug
+  class: correlated draws from a reused key).
+* ``WALL-CLOCK`` — ``time.time()`` used in duration arithmetic (the
+  PR 8 bug class: NTP steps and clock smearing corrupt measured
+  latencies; use ``time.perf_counter()`` / ``time.monotonic()``).
+  Reading ``time.time()`` as a *timestamp* (log provenance) is fine and
+  not flagged.
+* ``HOST-SYNC`` — host-synchronizing calls (``np.asarray``/``.item()``/
+  ``float()`` on traced values/``block_until_ready``/``device_get``)
+  inside a ``jax.jit``- or ``pallas_call``-compiled body.  Inside a
+  trace these either fail or silently bake a constant at trace time.
+* ``DONATED-USE`` — reading a buffer after passing it to a jit with
+  ``donate_argnums`` covering that position (donation invalidates the
+  buffer; XLA may have already reused its memory).
+* ``TRACED-BRANCH`` — Python ``if``/``while`` branching on a traced
+  array parameter inside a jitted body (trace-time ConcretizationError,
+  or a silently baked-in branch under ``static_argnums`` drift).
+  ``is None`` checks, ``.shape``/``.dtype`` attribute access and
+  ``len()`` are structural and not flagged.
+
+The analysis is deliberately flow-light: straight-line dataflow per
+function scope, both branches of an ``if`` explored independently and
+merged conservatively, loop bodies executed twice (so a consume in
+iteration 1 flags the reuse in iteration 2).  False positives are
+handled by ``# repro: noqa[RULE]`` (see :mod:`repro.analysis.findings`).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass, field
+
+from repro.analysis.findings import Finding, apply_noqa
+
+# jax.random.* callables whose first positional argument is a key they
+# CONSUME (drawing twice from one key repeats/correlates the stream).
+_KEY_CONSUMERS = frozenset({
+    "uniform", "normal", "bits", "randint", "choice", "permutation",
+    "categorical", "bernoulli", "gumbel", "exponential", "truncated_normal",
+    "laplace", "shuffle", "gamma", "beta", "poisson", "dirichlet", "split",
+    "multivariate_normal", "rademacher", "cauchy", "logistic", "t",
+    "loggamma", "orthogonal", "ball", "rayleigh", "weibull_min",
+})
+# Key-deriving calls that are safe to apply repeatedly to one key
+# (fold_in with distinct data is the documented stream-derivation
+# idiom); they never mark the key consumed.
+_KEY_DERIVERS = frozenset({"fold_in", "clone", "key_data", "wrap_key_data"})
+
+_HOST_SYNC_NP = frozenset({"asarray", "array"})
+_STATIC_TEST_CALLS = frozenset({
+    "len", "isinstance", "getattr", "hasattr", "type", "callable"})
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """Render a Name/Attribute chain as ``a.b.c`` (None if not one)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jax_random(func_value: ast.AST) -> bool:
+    """Does this expression look like the ``jax.random`` module?"""
+    if isinstance(func_value, ast.Name):
+        return func_value.id in {"random", "jrandom", "jr", "jax_random"}
+    if isinstance(func_value, ast.Attribute):
+        return func_value.attr == "random"
+    return False
+
+
+def _is_time_time(node: ast.AST, bare_time_fn: bool) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    f = node.func
+    if isinstance(f, ast.Attribute) and f.attr == "time":
+        return isinstance(f.value, ast.Name) and f.value.id == "time"
+    if bare_time_fn and isinstance(f, ast.Name) and f.id == "time":
+        return True
+    return False
+
+
+@dataclass
+class _FlowState:
+    """Per-scope dataflow facts."""
+
+    consumed: dict = field(default_factory=dict)   # key name -> consumer fn
+    dead: dict = field(default_factory=dict)       # name -> donating wrapper
+    timestamps: set = field(default_factory=set)   # names from time.time()
+
+    def copy(self) -> "_FlowState":
+        return _FlowState(dict(self.consumed), dict(self.dead),
+                          set(self.timestamps))
+
+    def merge(self, other: "_FlowState") -> None:
+        """Conservative join after exclusive branches."""
+        self.consumed.update(other.consumed)
+        self.dead.update(other.dead)
+        self.timestamps |= other.timestamps
+
+    def kill(self, name: str) -> None:
+        self.consumed.pop(name, None)
+        self.dead.pop(name, None)
+        self.timestamps.discard(name)
+
+
+class _ModuleInfo:
+    """Module-wide facts the per-scope passes need."""
+
+    def __init__(self, tree: ast.Module, path: str):
+        self.path = path
+        # ``from time import time`` makes bare ``time()`` the wall clock.
+        self.bare_time_fn = any(
+            isinstance(n, ast.ImportFrom) and n.module == "time"
+            and any(a.name == "time" for a in n.names)
+            for n in ast.walk(tree))
+        # Function names passed to jax.jit / pallas_call anywhere in the
+        # module (``jax.jit(f)``, ``jax.jit(partial(f, ...))``,
+        # ``pl.pallas_call(kernel, ...)``) are compiled bodies too.
+        self.jitted_names: set[str] = set()
+        # name -> donated positional indices, for wrappers assigned as
+        # ``f = jax.jit(g, donate_argnums=<literal>)``.
+        self.donating_wrappers: dict[str, tuple[int, ...]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                self._scan_call(node)
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1:
+                t = node.targets[0]
+                if isinstance(t, ast.Name) and isinstance(node.value, ast.Call):
+                    donated = _donated_argnums(node.value)
+                    if donated is not None:
+                        self.donating_wrappers[t.id] = donated
+
+    def _scan_call(self, node: ast.Call) -> None:
+        f = node.func
+        attr = f.attr if isinstance(f, ast.Attribute) else (
+            f.id if isinstance(f, ast.Name) else None)
+        if attr not in {"jit", "pallas_call"} or not node.args:
+            return
+        target = node.args[0]
+        if isinstance(target, ast.Call):  # jax.jit(partial(f, ...))
+            inner = target.func
+            inner_attr = inner.attr if isinstance(inner, ast.Attribute) else (
+                inner.id if isinstance(inner, ast.Name) else None)
+            if inner_attr == "partial" and target.args:
+                target = target.args[0]
+        if isinstance(target, ast.Name):
+            self.jitted_names.add(target.id)
+
+
+def _donated_argnums(call: ast.Call) -> tuple[int, ...] | None:
+    """Donated indices of a ``jax.jit(...)`` call with a LITERAL
+    ``donate_argnums`` (None when not that shape)."""
+    f = call.func
+    attr = f.attr if isinstance(f, ast.Attribute) else (
+        f.id if isinstance(f, ast.Name) else None)
+    if attr != "jit":
+        return None
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return (v.value,)
+        if isinstance(v, (ast.Tuple, ast.List)) and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, int)
+                for e in v.elts):
+            return tuple(e.value for e in v.elts)
+        return None  # non-literal (computed) -> cannot resolve statically
+    return None
+
+
+def _is_jit_decorated(node: ast.AST) -> bool:
+    for dec in getattr(node, "decorator_list", []):
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = _dotted(target) or ""
+        leaf = name.rsplit(".", 1)[-1]
+        if leaf == "jit":
+            return True
+        if leaf == "partial" and isinstance(dec, ast.Call) and dec.args:
+            inner = _dotted(dec.args[0]) or ""
+            if inner.rsplit(".", 1)[-1] == "jit":
+                return True
+    return False
+
+
+class _ScopeLinter:
+    """Runs all dataflow rules over one function (or module) scope."""
+
+    def __init__(self, mod: _ModuleInfo, findings: list[Finding],
+                 jitted: bool, params: set[str]):
+        self.mod = mod
+        self.findings = findings
+        self.jitted = jitted
+        self.params = params
+        self.wrappers = dict(mod.donating_wrappers)
+
+    # ------------------------------------------------------------------ #
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        self.findings.append(Finding(
+            rule=rule, path=self.mod.path,
+            line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0), message=message))
+
+    # --- statements ---------------------------------------------------- #
+
+    def exec_block(self, stmts, state: _FlowState) -> None:
+        for s in stmts:
+            self.exec_stmt(s, state)
+
+    def exec_stmt(self, stmt: ast.stmt, state: _FlowState) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return  # analyzed as their own scope by the module driver
+        if isinstance(stmt, ast.Assign):
+            self.visit_expr(stmt.value, state)
+            names = [n for t in stmt.targets for n in _target_names(t)]
+            for n in names:
+                state.kill(n)
+            if _is_time_time(stmt.value, self.mod.bare_time_fn):
+                state.timestamps.update(names)
+            if isinstance(stmt.value, ast.Call):
+                donated = _donated_argnums(stmt.value)
+                if donated is not None and len(names) == 1:
+                    self.wrappers[names[0]] = donated
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            if stmt.value is not None:
+                self.visit_expr(stmt.value, state)
+            for n in _target_names(stmt.target):
+                state.kill(n)
+                if stmt.value is not None and _is_time_time(
+                        stmt.value, self.mod.bare_time_fn):
+                    state.timestamps.add(n)
+        elif isinstance(stmt, ast.If):
+            self.visit_expr(stmt.test, state)
+            self._check_traced_branch(stmt, "if")
+            s_body, s_else = state.copy(), state.copy()
+            self.exec_block(stmt.body, s_body)
+            self.exec_block(stmt.orelse, s_else)
+            # A branch that cannot fall through (return/raise/...) does
+            # not contribute to the post-if state: a key consumed in an
+            # early-return arm is NOT consumed on the fallthrough path.
+            live = [s for s, blk in ((s_body, stmt.body),
+                                     (s_else, stmt.orelse))
+                    if not _terminates(blk)]
+            if not live:
+                live = [s_body]  # both terminate: post-state unreachable
+            first, *rest = live
+            state.consumed, state.dead, state.timestamps = (
+                first.consumed, first.dead, first.timestamps)
+            for s in rest:
+                state.merge(s)
+        elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self.visit_expr(stmt.iter, state)
+            for _ in range(2):  # second pass exposes cross-iteration reuse
+                for n in _target_names(stmt.target):
+                    state.kill(n)
+                self.exec_block(stmt.body, state)
+            self.exec_block(stmt.orelse, state)
+        elif isinstance(stmt, ast.While):
+            self.visit_expr(stmt.test, state)
+            self._check_traced_branch(stmt, "while")
+            for _ in range(2):
+                self.exec_block(stmt.body, state)
+                self.visit_expr(stmt.test, state)
+            self.exec_block(stmt.orelse, state)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self.visit_expr(item.context_expr, state)
+                if item.optional_vars is not None:
+                    for n in _target_names(item.optional_vars):
+                        state.kill(n)
+            self.exec_block(stmt.body, state)
+        elif isinstance(stmt, ast.Try):
+            self.exec_block(stmt.body, state)
+            for h in stmt.handlers:
+                s_h = state.copy()
+                self.exec_block(h.body, s_h)
+                state.merge(s_h)
+            self.exec_block(stmt.orelse, state)
+            self.exec_block(stmt.finalbody, state)
+        elif isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                for n in _target_names(t):
+                    state.kill(n)
+        else:
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self.visit_expr(child, state)
+
+    # --- expressions ---------------------------------------------------- #
+
+    def visit_expr(self, node: ast.AST, state: _FlowState) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            return  # separate scope
+        if isinstance(node, ast.Call):
+            self._visit_call(node, state)
+            return
+        if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.Add, ast.Sub)):
+            self._check_wallclock_arith(node, state)
+        elif isinstance(node, ast.Compare):
+            for side in [node.left] + node.comparators:
+                if self._is_timestamp(side, state):
+                    self._emit(
+                        "WALL-CLOCK", node,
+                        "time.time() result compared as a deadline; use "
+                        "time.monotonic()/perf_counter() for elapsed-time "
+                        "logic")
+                    break
+        elif isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            if node.id in state.dead:
+                self._emit(
+                    "DONATED-USE", node,
+                    f"'{node.id}' was donated to jitted call "
+                    f"'{state.dead[node.id]}' and may be invalidated; "
+                    f"copy it first or re-bind the result")
+            return
+        for child in ast.iter_child_nodes(node):
+            self.visit_expr(child, state)
+
+    def _visit_call(self, node: ast.Call, state: _FlowState) -> None:
+        # Arguments are evaluated (read) before the call consumes them.
+        self.visit_expr(node.func, state)
+        for a in node.args:
+            self.visit_expr(a, state)
+        for kw in node.keywords:
+            self.visit_expr(kw.value, state)
+
+        f = node.func
+        # PRNG-REUSE: jax.random.<consumer>(key, ...)
+        if (isinstance(f, ast.Attribute) and _is_jax_random(f.value)
+                and f.attr in _KEY_CONSUMERS and node.args):
+            key_arg = node.args[0]
+            if isinstance(key_arg, ast.Name):
+                name = key_arg.id
+                if name in state.consumed:
+                    self._emit(
+                        "PRNG-REUSE", node,
+                        f"key '{name}' already consumed by jax.random."
+                        f"{state.consumed[name]}; split it (or fold_in "
+                        f"distinct data) before drawing again")
+                state.consumed[name] = f.attr
+        # DONATED-USE: calling a donate_argnums wrapper kills its args.
+        wrapper = None
+        if isinstance(f, ast.Name) and f.id in self.wrappers:
+            wrapper = f.id
+        if wrapper is not None:
+            for i in self.wrappers[wrapper]:
+                if i < len(node.args) and isinstance(node.args[i], ast.Name):
+                    state.dead[node.args[i].id] = wrapper
+        # HOST-SYNC (only meaningful inside compiled bodies).
+        if self.jitted:
+            self._check_host_sync(node)
+
+    # --- rule bodies ---------------------------------------------------- #
+
+    def _is_timestamp(self, node: ast.AST, state: _FlowState) -> bool:
+        return (_is_time_time(node, self.mod.bare_time_fn)
+                or (isinstance(node, ast.Name) and isinstance(
+                    node.ctx, ast.Load) and node.id in state.timestamps))
+
+    def _check_wallclock_arith(self, node: ast.BinOp,
+                               state: _FlowState) -> None:
+        if self._is_timestamp(node.left, state) or self._is_timestamp(
+                node.right, state):
+            self._emit(
+                "WALL-CLOCK", node,
+                "time.time() used in duration arithmetic; use "
+                "time.perf_counter() (NTP steps/smearing corrupt "
+                "wall-clock deltas)")
+
+    def _check_host_sync(self, node: ast.Call) -> None:
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            if f.attr == "item":
+                self._emit("HOST-SYNC", node,
+                           ".item() inside a jit/pallas body forces a "
+                           "host sync (or bakes a tracer-time constant)")
+                return
+            if f.attr == "block_until_ready":
+                self._emit("HOST-SYNC", node,
+                           "block_until_ready inside a jit/pallas body "
+                           "is a host sync; call it on the result outside "
+                           "the trace")
+                return
+            if f.attr == "device_get":
+                self._emit("HOST-SYNC", node,
+                           "jax.device_get inside a jit/pallas body "
+                           "transfers to host at trace time")
+                return
+            if (f.attr in _HOST_SYNC_NP and isinstance(f.value, ast.Name)
+                    and f.value.id in {"np", "numpy", "onp"}):
+                self._emit("HOST-SYNC", node,
+                           f"np.{f.attr} inside a jit/pallas body pulls "
+                           f"the traced array to host; use jnp instead")
+                return
+        if (isinstance(f, ast.Name) and f.id in {"float", "int", "bool"}
+                and node.args):
+            if any(isinstance(n, ast.Name) and n.id in self.params
+                   and isinstance(n.ctx, ast.Load)
+                   for n in ast.walk(node.args[0])):
+                self._emit(
+                    "HOST-SYNC", node,
+                    f"{f.id}() on a traced parameter inside a jit/pallas "
+                    f"body concretizes at trace time; keep it as an array")
+
+    def _check_traced_branch(self, stmt, kw: str) -> None:
+        if not self.jitted:
+            return
+        if self._test_mentions_param(stmt.test):
+            self._emit(
+                "TRACED-BRANCH", stmt,
+                f"Python '{kw}' branches on a traced array parameter "
+                f"inside a jit/pallas body; use lax.cond/select or mark "
+                f"the argument static")
+
+    def _test_mentions_param(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Attribute):
+            return False  # x.shape / x.dtype / cfg.flag: structural
+        if isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in _STATIC_TEST_CALLS:
+                return False
+            return any(self._test_mentions_param(c)
+                       for c in ast.iter_child_nodes(node))
+        if isinstance(node, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            return False  # `x is None` — structural pytree dispatch
+        if isinstance(node, ast.Name):
+            return node.id in self.params
+        return any(self._test_mentions_param(c)
+                   for c in ast.iter_child_nodes(node))
+
+
+def _terminates(block: list[ast.stmt]) -> bool:
+    """True when the block cannot fall through to the statement after
+    the enclosing ``if`` (last statement unconditionally leaves it)."""
+    if not block:
+        return False
+    last = block[-1]
+    if isinstance(last, (ast.Return, ast.Raise, ast.Break, ast.Continue)):
+        return True
+    if isinstance(last, ast.If):
+        return bool(_terminates(last.body) and last.orelse
+                    and _terminates(last.orelse))
+    return False
+
+
+def _target_names(target: ast.AST) -> list[str]:
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        return [n for e in target.elts for n in _target_names(e)]
+    if isinstance(target, ast.Starred):
+        return _target_names(target.value)
+    return []
+
+
+def _param_names(node) -> set[str]:
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        a = node.args
+        names = [p.arg for p in
+                 a.posonlyargs + a.args + a.kwonlyargs]
+        if a.vararg:
+            names.append(a.vararg.arg)
+        if a.kwarg:
+            names.append(a.kwarg.arg)
+        return {n for n in names if n != "self"}
+    return set()
+
+
+def lint_source(source: str, path: str) -> list[Finding]:
+    """Run every AST rule over one file's source; noqa already applied."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding(rule="PARSE-ERROR", path=path,
+                        line=e.lineno or 1, col=e.offset or 0,
+                        message=f"file does not parse: {e.msg}")]
+    mod = _ModuleInfo(tree, path)
+    findings: list[Finding] = []
+
+    # Collect every function-like scope, tagging compiled ones.  A def
+    # nested inside a jitted def runs traced too, so jittedness is
+    # inherited lexically.
+    scopes: list[tuple[list, bool, set[str]]] = [(tree.body, False, set())]
+
+    def collect(node, jitted_ctx: bool):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                jitted = (jitted_ctx or _is_jit_decorated(child)
+                          or child.name in mod.jitted_names)
+                scopes.append((child.body, jitted, _param_names(child)))
+                collect(child, jitted)
+            elif isinstance(child, ast.Lambda):
+                scopes.append(([ast.Expr(value=child.body)], jitted_ctx,
+                               _param_names(child)))
+                collect(child, jitted_ctx)
+            else:
+                collect(child, jitted_ctx)
+
+    collect(tree, False)
+    for body, jitted, params in scopes:
+        linter = _ScopeLinter(mod, findings, jitted, params)
+        linter.exec_block(body, _FlowState())
+
+    # Loop bodies run twice: dedupe identical findings from one site.
+    seen, unique = set(), []
+    for f in findings:
+        k = (f.rule, f.line, f.col, f.message)
+        if k not in seen:
+            seen.add(k)
+            unique.append(f)
+    return apply_noqa(unique, source.splitlines())
+
+
+def lint_file(path: str, root: str | None = None) -> list[Finding]:
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    rel = os.path.relpath(path, root) if root else path
+    return lint_source(source, rel)
+
+
+def iter_python_files(paths, *, exclude_parts=("fixtures",)):
+    """Yield .py files under ``paths``; directories named in
+    ``exclude_parts`` (lint fixtures: deliberate violations) are
+    skipped."""
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                yield p
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(
+                d for d in dirnames
+                if d not in exclude_parts and d != "__pycache__")
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def run_lint(paths, root: str | None = None) -> list[Finding]:
+    findings: list[Finding] = []
+    for path in iter_python_files(paths):
+        findings.extend(lint_file(path, root=root))
+    return findings

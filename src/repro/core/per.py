@@ -39,7 +39,8 @@ class SumTreeState(NamedTuple):
     """Array-backed sum tree. tree[1] is the root; leaves at [leaf0, leaf0+n)."""
 
     tree: jax.Array  # float32[2 * n_pow2]
-    n_leaves: int
+    n_leaves: jax.Array  # int32 scalar (strongly typed: a weak python int
+    # leaf makes every downstream jit retrace when a device value arrives)
 
 
 class SumTreePER:
@@ -52,7 +53,8 @@ class SumTreePER:
 
     def init(self) -> SumTreeState:
         return SumTreeState(
-            tree=jnp.zeros(2 * self.n_pow2, jnp.float32), n_leaves=self.capacity
+            tree=jnp.zeros(2 * self.n_pow2, jnp.float32),
+            n_leaves=jnp.asarray(self.capacity, jnp.int32),
         )
 
     def total(self, state: SumTreeState) -> jax.Array:

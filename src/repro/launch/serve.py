@@ -37,17 +37,17 @@ def main(argv=None):
     params = model.init_params(jax.random.key(args.seed))
     max_len = args.prompt_len + args.gen + 1
 
-    key = jax.random.key(args.seed + 1)
+    k_tok, k_aud, k_vis = jax.random.split(jax.random.key(args.seed + 1), 3)
     B = args.batch
-    prompts = jax.random.randint(key, (B, args.prompt_len), 0,
+    prompts = jax.random.randint(k_tok, (B, args.prompt_len), 0,
                                  cfg.vocab_size, dtype=jnp.int32)
     batch = {"tokens": prompts}
     if cfg.family == "audio":
         batch["frames"] = jax.random.normal(
-            key, (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+            k_aud, (B, cfg.enc_seq, cfg.d_model), jnp.float32)
     if cfg.vis_prefix_len:
         batch["patch_embeds"] = jax.random.normal(
-            key, (B, cfg.vis_prefix_len, cfg.d_model), jnp.float32)
+            k_vis, (B, cfg.vis_prefix_len, cfg.d_model), jnp.float32)
         max_len += cfg.vis_prefix_len
 
     from repro.serving import Engine

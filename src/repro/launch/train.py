@@ -86,7 +86,7 @@ def main(argv=None):
             start_step, (state, data_state) = latest
             print(f"resumed from step {start_step}")
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(start_step, args.steps):
         key = jax.random.fold_in(jax.random.key(args.seed), step)
         idx, batch = data.sample(data_state, key)
@@ -96,7 +96,7 @@ def main(argv=None):
         if step % args.log_every == 0 or step == args.steps - 1:
             print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
                   f"gnorm {float(metrics['grad_norm']):.3f} "
-                  f"({(time.time() - t0):.1f}s)", flush=True)
+                  f"({(time.perf_counter() - t0):.1f}s)", flush=True)
         if mgr and mgr.should_save(step + 1):
             mgr.save(step + 1, (state, data_state))
             if mgr.preempted:

@@ -44,7 +44,9 @@ class JsonlExporter:
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
-        self._lock = threading.Lock()
+        from repro.analysis.locks import make_lock
+
+        self._lock = make_lock("obs.jsonl_exporter")
         self._f = open(path, "a", buffering=1)
         self.lines_written = 0
 

@@ -304,8 +304,10 @@ class Registry:
     """
 
     def __init__(self, enabled: bool = True):
+        from repro.analysis.locks import make_lock
+
         self.enabled = enabled
-        self._lock = threading.Lock()
+        self._lock = make_lock("obs.registry")
         self._instruments: dict[str, Instrument] = {}
 
     def _get(self, name: str, factory) -> Any:

@@ -80,7 +80,9 @@ class PauseGate:
     """
 
     def __init__(self):
-        self._cond = threading.Condition()
+        from repro.analysis.locks import make_condition
+
+        self._cond = make_condition("runtime.pause_gate")
         self._paused = False
         self._parked = 0
 

@@ -60,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.analysis.locks import tracked_queue
 from repro.rl.dqn import DQNConfig, make_dqn
 from repro.runtime.actor import ActorPool, make_rollout, put_with_stop
 from repro.runtime.learner import Feedback, Learner, make_slab_learner
@@ -573,9 +574,10 @@ class ReplayService:
             opt_m0, opt_v0 = state0.opt_m, state0.opt_v
             self._bstate = state0.buffer          # canonical replay state
         params_box = [params0]                # actors read, learner swaps
-        work_q: queue.Queue = queue.Queue(self.queue_size)
+        work_q: queue.Queue = tracked_queue("runtime.work_q", self.queue_size)
         self._work_q = work_q
-        batch_q: queue.Queue = queue.Queue(self.prefetch_depth)
+        batch_q: queue.Queue = tracked_queue(
+            "runtime.batch_q", self.prefetch_depth)
         stop = threading.Event()
         self._fb_rows = collections.deque() if manager is not None else None
         # The rec dict is the CONTROL PLANE: counters the COW snapshot
@@ -930,7 +932,7 @@ class _CowSnapshotter:
         # capture() does not dispatch a jax op per snapshot.
         self._key_data = np.asarray(jax.random.key_data(key))
         self._busy = threading.Event()
-        self._q: queue.Queue = queue.Queue(1)
+        self._q: queue.Queue = tracked_queue("runtime.snapshot_q", 1)
         self._thread = threading.Thread(target=self._worker,
                                         name="replay-snapshot", daemon=True)
         self._thread.start()

@@ -38,6 +38,9 @@ def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
     config.addinivalue_line(
         "markers", "stats: statistical-distribution test (chi-square/KS)")
+    config.addinivalue_line(
+        "markers", "analysis: static-analysis gate tests "
+                   "(repro.analysis fixtures, lockdep, trace checks)")
 
 
 @pytest.fixture(scope="session")

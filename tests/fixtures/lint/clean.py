@@ -1,0 +1,49 @@
+"""Fixture: the legit twins of every flagged pattern — must lint clean."""
+import time
+
+import jax
+
+
+def fold_loop(key, n):
+    """fold_in derives fresh keys; re-using the parent is fine."""
+    outs = []
+    for i in range(n):
+        k = jax.random.fold_in(key, i)
+        outs.append(jax.random.uniform(k, (2,)))
+    return outs
+
+
+def split_then_draw(key):
+    k1, k2 = jax.random.split(key)
+    return jax.random.uniform(k1, (2,)), jax.random.normal(k2, (2,))
+
+
+def timed(fn):
+    """Durations come from the monotonic clock."""
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def provenance():
+    """A wall-clock *timestamp* (no arithmetic) is legitimate."""
+    return {"ts": time.time()}
+
+
+def deliberate_replay(key):
+    """Intentional same-key draw, suppressed inline."""
+    a = jax.random.uniform(key, (2,))
+    b = jax.random.uniform(key, (2,))  # repro: noqa[PRNG-REUSE]
+    return a, b
+
+
+def early_return_draw(key, fast):
+    """A draw inside an early-return arm does not poison the fallthrough."""
+    if fast:
+        return jax.random.uniform(key, (2,))
+    return jax.random.normal(key, (4,))
+
+
+def host_side(x):
+    """Host syncs are fine OUTSIDE jit."""
+    return float(jax.numpy.sum(x))

@@ -1,0 +1,16 @@
+"""Fixture: DONATED-USE — reading a buffer after passing it to a
+donate_argnums jit (the donated buffer is invalidated by the call)."""
+import jax
+
+
+def _advance(state, batch):
+    return state
+
+
+step = jax.jit(_advance, donate_argnums=0)
+
+
+def train_step(state, batch):
+    new_state = step(state, batch)
+    stale = state  # BUG: ``state`` was donated to ``step``
+    return new_state, stale

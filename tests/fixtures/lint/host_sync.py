@@ -1,0 +1,9 @@
+"""Fixture: HOST-SYNC — host transfer inside a jitted body."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bad_mean(x):
+    total = jnp.sum(x)
+    return total.item() / x.shape[0]  # BUG: .item() syncs under jit

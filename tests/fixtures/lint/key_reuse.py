@@ -1,0 +1,8 @@
+"""Fixture: PRNG-REUSE — one key feeds two draws (the PR 1/PR 2 bug class)."""
+import jax
+
+
+def two_draws(key):
+    noise = jax.random.uniform(key, (4,))
+    jitter = jax.random.normal(key, (4,))  # BUG: key already consumed
+    return noise + jitter

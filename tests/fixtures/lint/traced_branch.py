@@ -1,0 +1,9 @@
+"""Fixture: TRACED-BRANCH — python control flow on a traced parameter."""
+import jax
+
+
+@jax.jit
+def clip_positive(x):
+    if x > 0:  # BUG: x is a tracer; use jnp.where / lax.cond
+        return x
+    return 0.0 * x

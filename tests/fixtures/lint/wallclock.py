@@ -1,0 +1,8 @@
+"""Fixture: WALL-CLOCK — time.time() in duration math (the PR 8 bug class)."""
+import time
+
+
+def measure(fn):
+    t0 = time.time()
+    fn()
+    return time.time() - t0  # BUG: wall clock is not monotonic

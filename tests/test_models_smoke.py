@@ -12,19 +12,20 @@ B, S = 2, 64
 
 
 def make_batch(cfg, key):
-    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+    k_tok, k_aud, k_vis = jax.random.split(key, 3)
+    toks = jax.random.randint(k_tok, (B, S), 0, cfg.vocab_size, jnp.int32)
     batch = {"tokens": toks, "targets": toks,
              "loss_mask": jnp.ones((B, S), jnp.float32)}
     if cfg.family == "audio":
         batch["frames"] = jax.random.normal(
-            key, (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+            k_aud, (B, cfg.enc_seq, cfg.d_model), jnp.float32)
     if cfg.vis_prefix_len:
         st = S - cfg.vis_prefix_len
         batch.update(
             tokens=toks[:, :st], targets=toks[:, :st],
             loss_mask=jnp.ones((B, st), jnp.float32),
             patch_embeds=jax.random.normal(
-                key, (B, cfg.vis_prefix_len, cfg.d_model), jnp.float32))
+                k_vis, (B, cfg.vis_prefix_len, cfg.d_model), jnp.float32))
     return batch
 
 
