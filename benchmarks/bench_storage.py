@@ -1,0 +1,104 @@
+"""Pixel storage economics: frame-deduplicated uint8 ring vs the naive
+float transition buffer.
+
+Rows answer the two questions that justify the frame-store mode:
+
+* **bytes/transition** — the naive buffer stores ``obs`` AND
+  ``next_obs`` as ``float32[H, W, history_len]`` per transition
+  (2 * H*W*K * 4 bytes of observation payload); the frame store keeps
+  one ``uint8[H, W]`` frame per transition and rebuilds both stacks at
+  sample time.  For the MinAtar-scale default (10x10, K=4) that is an
+  ~27x reduction — ``reduction_x`` in the rows, measured from the
+  actual storage pytree leaf sizes, not the formula.
+* **sample bandwidth** — what the sample-time gather costs: media
+  microseconds per jitted ``sample(batch)`` draw and the implied
+  transitions/second, for both layouts, so the memory win is priced
+  against its materialization overhead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row, time_fn
+from repro.core.replay_buffer import FrameStore, ReplayBuffer
+from repro.core.samplers import make_sampler
+
+HW = (10, 10)       # MinAtar-scale frame
+K = 4               # history_len
+
+
+def _obs_bytes(state) -> int:
+    """Observation-payload bytes in a storage pytree (everything that
+    scales with H*W; the scalar action/reward/done streams are identical
+    across layouts and excluded from the ratio)."""
+    return sum(leaf.nbytes for leaf in jax.tree.leaves(state.storage)
+               if leaf.ndim > 2)
+
+
+def _naive_rb(cap):
+    rb = ReplayBuffer(cap, make_sampler("uniform", cap))
+    st = rb.init({"obs": jnp.zeros(HW + (K,), jnp.float32),
+                  "next_obs": jnp.zeros(HW + (K,), jnp.float32),
+                  "action": jnp.int32(0), "reward": jnp.float32(0),
+                  "done": jnp.float32(0)})
+    ko, kn = jax.random.split(jax.random.key(0))
+    st = rb.add_batch(st, {
+        "obs": jax.random.uniform(ko, (cap,) + HW + (K,)),
+        "next_obs": jax.random.uniform(kn, (cap,) + HW + (K,)),
+        "action": jnp.zeros(cap, jnp.int32),
+        "reward": jnp.arange(cap, dtype=jnp.float32),
+        "done": jnp.zeros(cap)})
+    return rb, jax.block_until_ready(st)
+
+
+def _frame_rb(cap):
+    rb = ReplayBuffer(cap, make_sampler("uniform", cap),
+                      frame_store=FrameStore(history_len=K, frame_shape=HW))
+    st = rb.init({"frame": jnp.zeros(HW, jnp.uint8),
+                  "action": jnp.int32(0), "reward": jnp.float32(0),
+                  "done": jnp.float32(0)})
+    k = jax.random.key(1)
+    st = rb.add_batch(st, {
+        "frame": jax.random.randint(k, (cap,) + HW, 0, 256, jnp.uint8),
+        "action": jnp.zeros(cap, jnp.int32),
+        "reward": jnp.arange(cap, dtype=jnp.float32),
+        "done": jnp.zeros(cap)})
+    return rb, jax.block_until_ready(st)
+
+
+def run(sizes=(10_000, 100_000), batch: int = 256):
+    rows = []
+    for cap in sizes:
+        layouts = {"naive-float": _naive_rb(cap),
+                   "frame-store": _frame_rb(cap)}
+        bt = {}
+        for name, (rb, st) in layouts.items():
+            bt[name] = _obs_bytes(st) / cap
+            sample = jax.jit(
+                lambda s, key, rb=rb: rb.sample(s, key, batch)[1])
+            us = time_fn(sample, st, jax.random.key(7))
+            rows.append({
+                "name": f"storage_{name}",
+                "capacity": cap,
+                "batch": batch,
+                "bytes_per_transition": bt[name],
+                "sample_us": us,
+                "sample_transitions_per_s": batch / (us * 1e-6),
+            })
+            print(csv_row(f"storage_{name}_{cap}", us,
+                          f"{bt[name]:.0f} B/transition"), flush=True)
+        reduction = bt["naive-float"] / bt["frame-store"]
+        rows.append({"name": "storage_reduction", "capacity": cap,
+                     "reduction_x": reduction})
+        print(f"reduction @{cap}: {reduction:.1f}x", flush=True)
+        assert reduction >= 20.0, (
+            f"frame store must cut observation bytes >=20x, got "
+            f"{reduction:.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import write_bench_json
+
+    write_bench_json("storage", run())

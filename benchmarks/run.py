@@ -27,7 +27,7 @@ def main() -> None:
                     help="smaller sizes / fewer seeds")
     ap.add_argument("--only", default=None,
                     help="comma list: fig4,fig7,fig9,table1,samplers,"
-                         "sampling,venv,sharded,runtime,replay")
+                         "sampling,venv,sharded,runtime,replay,storage")
     ap.add_argument("--out", default=".",
                     help="directory for the BENCH_*.json artifacts")
     ap.add_argument("--profile", action="store_true",
@@ -96,7 +96,7 @@ def main() -> None:
         return None  # the child already wrote its own json
 
     from benchmarks import (bench_replay, bench_runtime, bench_samplers,
-                            bench_vector_env, fig4_latency,
+                            bench_storage, bench_vector_env, fig4_latency,
                             fig7_sampling_error, fig9_hw_latency,
                             table1_learning)
 
@@ -128,6 +128,8 @@ def main() -> None:
     section("replay", lambda: bench_replay.run(
         sizes=(10_000,) if args.quick else (10_000, 100_000),
         steps=120))
+    section("storage", lambda: bench_storage.run(
+        sizes=(10_000,) if args.quick else (10_000, 100_000)))
     section("sharded", sharded_subprocess)
 
     if exporter:

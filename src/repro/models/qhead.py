@@ -13,11 +13,20 @@ data-parallel over seeds) and checkpoint with zero glue:
 * ``"dueling"`` — Wang et al.'s dueling decomposition: a shared trunk
   feeding separate state-value and advantage streams, recombined as
   ``Q(s, a) = V(s) + A(s, a) - mean_a A(s, a)`` (the identifiable form).
+* ``"conv"`` / ``"conv-dueling"`` — the pixel-tier counterparts: a
+  MinAtar-scale conv trunk (one 3x3 VALID conv to 16 channels, ReLU,
+  flatten, dense) feeding the same output structure.  Built for
+  ``[H, W, C]`` observations where C is the frame-stack depth
+  materialized by the replay buffer's frame store.
 
-Both accept a single observation ``[obs_dim]`` or a batch
-``[B, obs_dim]`` and return Q-values with ``n_actions`` on the last
-axis — the contract the actor's argmax and the learner's
-``take_along_axis`` rely on.
+Vector heads accept a single observation ``[obs_dim]`` or a batch
+``[B, obs_dim]``; conv heads accept ``[H, W, C]`` or ``[B, H, W, C]``.
+All return Q-values with ``n_actions`` on the last axis — the contract
+the actor's argmax and the learner's ``take_along_axis`` rely on.
+
+``make_qhead`` takes an ``obs_shape`` tuple (``(obs_dim,)`` for vector
+heads); a bare int is accepted for back-compat with pre-pixel call
+sites, as is the deprecated ``obs_dim=`` keyword alias.
 """
 from __future__ import annotations
 
@@ -26,7 +35,10 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-HEAD_KINDS = ("mlp", "dueling")
+HEAD_KINDS = ("mlp", "dueling", "conv", "conv-dueling")
+
+CONV_CHANNELS = 16
+CONV_K = 3
 
 
 def mlp_init(key, sizes):
@@ -49,6 +61,45 @@ def mlp_apply(params, x):
     return x
 
 
+def conv_init(key, in_channels: int):
+    """He-initialised 3x3 VALID conv, ``in_channels -> CONV_CHANNELS``."""
+    fan_in = CONV_K * CONV_K * in_channels
+    return {
+        "w": jax.random.normal(key, (CONV_K, CONV_K, in_channels,
+                                     CONV_CHANNELS))
+        * (2.0 / fan_in) ** 0.5,
+        "b": jnp.zeros(CONV_CHANNELS),
+    }
+
+
+def conv_apply(params, x):
+    """[B, H, W, C] -> [B, H-2, W-2, CONV_CHANNELS], ReLU'd."""
+    y = jax.lax.conv_general_dilated(
+        x, params["w"], window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return jax.nn.relu(y + params["b"])
+
+
+def _flat_conv_dim(obs_shape) -> int:
+    h, w, _ = obs_shape
+    if h <= CONV_K - 1 or w <= CONV_K - 1:
+        raise ValueError(
+            f"obs_shape {obs_shape} too small for a {CONV_K}x{CONV_K} "
+            "VALID conv")
+    return (h - CONV_K + 1) * (w - CONV_K + 1) * CONV_CHANNELS
+
+
+def _batched(apply):
+    """Wrap a batch-only conv apply so a single [H, W, C] obs also works."""
+
+    def wrapped(params, x):
+        if x.ndim == 3:
+            return apply(params, x[None])[0]
+        return apply(params, x)
+
+    return wrapped
+
+
 class QHead(NamedTuple):
     """An init/apply pair mapping observations to Q-values."""
 
@@ -57,12 +108,37 @@ class QHead(NamedTuple):
     apply: Callable[[Any, jax.Array], jax.Array]  # (params, obs) -> q
 
 
-def make_qhead(kind: str, obs_dim: int, hidden: int,
-               n_actions: int) -> QHead:
-    """Build a Q-head by kind (``"mlp"`` or ``"dueling"``)."""
+def make_qhead(kind: str, obs_shape=None, hidden: int = 128,
+               n_actions: int = 2, *, obs_dim=None) -> QHead:
+    """Build a Q-head by kind (see :data:`HEAD_KINDS`).
+
+    ``obs_shape`` is a shape tuple: ``(obs_dim,)`` for the vector heads,
+    ``(H, W, C)`` for the conv heads.  A bare int (or the deprecated
+    ``obs_dim=`` keyword) is normalized to a 1-tuple.
+    """
+    if obs_shape is None:
+        obs_shape = obs_dim
+    if obs_shape is None:
+        raise ValueError("make_qhead requires obs_shape")
+    if isinstance(obs_shape, int):
+        obs_shape = (obs_shape,)
+    obs_shape = tuple(int(d) for d in obs_shape)
+
+    if kind in ("mlp", "dueling"):
+        if len(obs_shape) != 1:
+            raise ValueError(
+                f"{kind!r} head needs a flat (obs_dim,) shape, got "
+                f"{obs_shape}; use a conv head for pixel observations")
+        (flat,) = obs_shape
+    elif kind in ("conv", "conv-dueling"):
+        if len(obs_shape) != 3:
+            raise ValueError(
+                f"{kind!r} head needs an (H, W, C) shape, got {obs_shape}")
+        flat = _flat_conv_dim(obs_shape)
+
     if kind == "mlp":
         def init(key):
-            return mlp_init(key, [obs_dim, hidden, hidden, n_actions])
+            return mlp_init(key, [flat, hidden, hidden, n_actions])
 
         return QHead(kind=kind, init=init, apply=mlp_apply)
 
@@ -70,7 +146,7 @@ def make_qhead(kind: str, obs_dim: int, hidden: int,
         def init(key):
             k_trunk, k_v, k_a = jax.random.split(key, 3)
             return {
-                "trunk": mlp_init(k_trunk, [obs_dim, hidden, hidden]),
+                "trunk": mlp_init(k_trunk, [flat, hidden, hidden]),
                 "value": mlp_init(k_v, [hidden, 1]),
                 "adv": mlp_init(k_a, [hidden, n_actions]),
             }
@@ -84,6 +160,42 @@ def make_qhead(kind: str, obs_dim: int, hidden: int,
             return v + a - jnp.mean(a, axis=-1, keepdims=True)
 
         return QHead(kind=kind, init=init, apply=apply)
+
+    if kind == "conv":
+        def init(key):
+            k_c, k_d = jax.random.split(key)
+            return {
+                "conv": conv_init(k_c, obs_shape[-1]),
+                "dense": mlp_init(k_d, [flat, hidden, n_actions]),
+            }
+
+        def apply(params, x):
+            h = conv_apply(params["conv"], x)
+            h = h.reshape(h.shape[0], -1)
+            return mlp_apply(params["dense"], h)
+
+        return QHead(kind=kind, init=init, apply=_batched(apply))
+
+    if kind == "conv-dueling":
+        def init(key):
+            k_c, k_t, k_v, k_a = jax.random.split(key, 4)
+            return {
+                "conv": conv_init(k_c, obs_shape[-1]),
+                "trunk": mlp_init(k_t, [flat, hidden]),
+                "value": mlp_init(k_v, [hidden, 1]),
+                "adv": mlp_init(k_a, [hidden, n_actions]),
+            }
+
+        def apply(params, x):
+            h = conv_apply(params["conv"], x)
+            h = h.reshape(h.shape[0], -1)
+            for layer in params["trunk"]:
+                h = jax.nn.relu(h @ layer["w"] + layer["b"])
+            v = mlp_apply(params["value"], h)
+            a = mlp_apply(params["adv"], h)
+            return v + a - jnp.mean(a, axis=-1, keepdims=True)
+
+        return QHead(kind=kind, init=init, apply=_batched(apply))
 
     raise ValueError(
         f"unknown Q-head kind: {kind!r} (available: {list(HEAD_KINDS)})")

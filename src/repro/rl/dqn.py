@@ -8,7 +8,9 @@ three orthogonal axes, all selected from :class:`DQNConfig` with zero
 call-site changes:
 
 * **Q-head** (``repro.models.qhead``): the 3-layer MLP of the paper, or
-  the dueling value/advantage decomposition (Wang et al. 2016).
+  the dueling value/advantage decomposition (Wang et al. 2016).  Pixel
+  envs (``len(obs_shape) > 1``) promote these to their conv
+  counterparts automatically.
 * **Target rule**: vanilla ``max_a Q_target`` or Double-DQN's
   argmax-decoupled ``Q_target(s', argmax_a Q_online(s', a))``
   (van Hasselt et al. 2016) — the setup Schaul et al. report PER on.
@@ -20,6 +22,23 @@ call-site changes:
 ``agent="dqn" | "double" | "dueling" | "double-dueling"`` composes the
 first two axes.  The ENTIRE loop — environment, replay, sampling, TD
 update — is one lax.scan, so a full CartPole run takes seconds on CPU.
+
+Observation contract: agents are built from the env's ``obs_shape``
+(``(obs_dim,)`` for the classic-control envs, ``(H, W)`` for the pixel
+envs).  Pixel envs switch the replay buffer to frame-deduplicated uint8
+storage (:class:`~repro.core.replay_buffer.FrameStore`): each step
+stores ONE raw frame, the buffer materializes ``history_len``-stacked
+float batches at sample time, and the actor maintains the same uint8
+stack as its policy input — both sides convert with the identical
+``frame * scale`` expression, so materialized training observations are
+bit-identical to what the policy saw.
+
+TD targets bootstrap on ``terminated``, not ``done``: an episode cut by
+the env's time limit (``done`` without ``terminated``) is not a real
+terminal state, and zeroing its bootstrap would bias Q toward the
+truncation horizon on every step-capped env.  The frame path stores no
+pre-reset observation, so there ``terminated`` collapses to ``done``
+(see the replay-buffer module docstring).
 
 The actor side is batched: ``cfg.num_envs`` independent environments
 step in lockstep (``VectorEnv``), every iteration writes a B-transition
@@ -45,7 +64,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.per import beta_schedule
-from repro.core.replay_buffer import ReplayBuffer
+from repro.core.replay_buffer import FrameStore, ReplayBuffer
 from repro.core.samplers import make_sampler
 from repro.models.qhead import make_qhead, mlp_apply, mlp_init  # noqa: F401
 from repro.rl import envs as envs_mod
@@ -53,13 +72,16 @@ from repro.train import checkpoint as ckpt_mod
 
 RETURN_RING = 64  # completed-episode returns kept for the train metric
 
-# agent name -> (Q-head kind, use Double-DQN targets)
+# agent name -> (Q-head kind, use Double-DQN targets); pixel envs promote
+# the head kind to its conv counterpart.
 AGENTS = {
     "dqn": ("mlp", False),
     "double": ("mlp", True),
     "dueling": ("dueling", False),
     "double-dueling": ("dueling", True),
 }
+
+_CONV_PROMOTION = {"mlp": "conv", "dueling": "conv-dueling"}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +94,7 @@ class DQNConfig:
     replay_size: int = 2000
     batch: int = 64
     hidden: int = 128
+    history_len: int = 4           # frames per stacked pixel observation
     gamma: float = 0.99
     lr: float = 1e-3
     eps_start: float = 1.0
@@ -102,7 +125,9 @@ class AgentState(NamedTuple):
     opt_v: Any
     buffer: Any
     env_state: Any               # VectorEnv state, leaves lead with [num_envs]
-    obs: jax.Array               # float32[num_envs, obs_dim]
+    obs: jax.Array               # policy input: float32[num_envs, obs_dim],
+    #                              or uint8[num_envs, H, W, history_len] for
+    #                              pixel envs (the actor's frame stack)
     step: jax.Array
     episode_return: jax.Array    # float32[num_envs] running returns
     last_returns: jax.Array      # ring buffer of completed episode returns
@@ -136,11 +161,15 @@ class DQN(NamedTuple):
     beta_at: Callable        # (step) -> IS exponent under cfg's schedule
     q_apply: Callable        # (params, obs) -> Q-values (the head's apply)
     example_transition: Any  # zero transition pytree (schema of the ring)
+    init_obs: Callable       # (venv env_state) -> initial policy input
+    #                          (raw obs, or the seeded frame stack)
 
 
 def make_dqn(cfg: DQNConfig) -> DQN:
     env = envs_mod.make_env(cfg.env)
     venv = envs_mod.VectorEnv(env, cfg.num_envs)
+    obs_shape = venv.obs_shape
+    pixel = len(obs_shape) > 1
     try:
         head_kind, double = AGENTS[cfg.agent]
     except KeyError:
@@ -148,7 +177,12 @@ def make_dqn(cfg: DQNConfig) -> DQN:
                          f"(available: {sorted(AGENTS)})") from None
     if cfg.n_step < 1:
         raise ValueError(f"n_step must be >= 1, got {cfg.n_step}")
-    qhead = make_qhead(head_kind, env.obs_dim, cfg.hidden, env.n_actions)
+    if pixel:
+        head_kind = _CONV_PROMOTION[head_kind]
+        net_shape = obs_shape + (cfg.history_len,)
+    else:
+        net_shape = obs_shape
+    qhead = make_qhead(head_kind, net_shape, cfg.hidden, env.n_actions)
     q_apply = qhead.apply
     # n-step targets bootstrap the un-terminated window with gamma^n.
     gamma_n = cfg.gamma ** cfg.n_step
@@ -161,13 +195,57 @@ def make_dqn(cfg: DQNConfig) -> DQN:
         csp_ratio=cfg.amper_csp_ratio, v_max=cfg.v_max,
         min_csp=cfg.batch, knn_mode="bisect")
     is_per = cfg.sampler.startswith("per")
+    frame_store = (FrameStore(history_len=cfg.history_len,
+                              frame_shape=obs_shape, stride=cfg.num_envs,
+                              n_step=cfg.n_step, gamma=cfg.gamma)
+                   if pixel else None)
     rb = ReplayBuffer(cfg.replay_size, sampler, alpha=cfg.alpha,
-                      beta=cfg.beta, n_step=cfg.n_step, gamma=cfg.gamma,
-                      num_envs=cfg.num_envs)
-    example_transition = {
-        "obs": jnp.zeros(env.obs_dim), "action": jnp.int32(0),
-        "reward": jnp.float32(0), "next_obs": jnp.zeros(env.obs_dim),
-        "done": jnp.float32(0)}
+                      beta=cfg.beta,
+                      n_step=1 if pixel else cfg.n_step,
+                      gamma=cfg.gamma, num_envs=cfg.num_envs,
+                      frame_store=frame_store)
+    if pixel:
+        # One uint8 frame per transition; obs/next_obs stacks are
+        # materialized by the buffer at sample time.
+        example_transition = {
+            "frame": jnp.zeros(obs_shape, jnp.uint8),
+            "action": jnp.int32(0), "reward": jnp.float32(0),
+            "done": jnp.float32(0), "terminated": jnp.float32(0)}
+    else:
+        example_transition = {
+            "obs": jnp.zeros(obs_shape), "action": jnp.int32(0),
+            "reward": jnp.float32(0), "next_obs": jnp.zeros(obs_shape),
+            "done": jnp.float32(0), "terminated": jnp.float32(0)}
+
+    def stack_init(frames):
+        """Seed a history stack from one uint8 frame batch: zeros except
+        the newest plane — the same padding the frame store materializes
+        for an episode's first observation."""
+        z = jnp.zeros(frames.shape + (cfg.history_len,), jnp.uint8)
+        return z.at[..., -1].set(frames)
+
+    def stack_push(stack, frames, done):
+        """Shift one frame in; restart from zero-padding where ``done``."""
+        shifted = jnp.concatenate([stack[..., 1:], frames[..., None]],
+                                  axis=-1)
+        d = jnp.reshape(done, jnp.shape(done)
+                        + (1,) * (shifted.ndim - jnp.ndim(done)))
+        return jnp.where(d, stack_init(frames), shifted)
+
+    if pixel:
+        def q_in(obs):
+            # The one uint8 -> float expression shared with
+            # ReplayBuffer.materialize (bit-identical policy inputs).
+            return obs.astype(jnp.float32) * frame_store.scale
+
+        def init_obs(env_state):
+            return stack_init(venv.obs(env_state))
+    else:
+        def q_in(obs):
+            return obs
+
+        def init_obs(env_state):
+            return venv.obs(env_state)
 
     def init(key) -> AgentState:
         k1, k2 = jax.random.split(key)
@@ -179,7 +257,7 @@ def make_dqn(cfg: DQNConfig) -> DQN:
             opt_m=jax.tree.map(jnp.zeros_like, params),
             opt_v=jax.tree.map(jnp.zeros_like, params),
             buffer=rb.init(tr), env_state=env_state,
-            obs=venv.obs(env_state), step=jnp.int32(0),
+            obs=init_obs(env_state), step=jnp.int32(0),
             episode_return=jnp.zeros(cfg.num_envs),
             last_returns=jnp.zeros(ring), n_episodes=jnp.int32(0))
 
@@ -195,7 +273,10 @@ def make_dqn(cfg: DQNConfig) -> DQN:
             boot = jax.lax.stop_gradient(boot)
         else:
             boot = qn.max(-1)
-        target = batch["reward"] + gamma_n * (1 - batch["done"]) * boot
+        # Bootstrap through time-limit truncation: only a true MDP
+        # terminal (`terminated`) zeroes the tail — a `done` from the
+        # step cap is an artifact of the horizon, not of the value.
+        target = batch["reward"] + gamma_n * (1 - batch["terminated"]) * boot
         td = qa - jax.lax.stop_gradient(target)
         return jnp.mean(weights * td * td), td
 
@@ -222,23 +303,34 @@ def make_dqn(cfg: DQNConfig) -> DQN:
         """One vectorized epsilon-greedy env step (the actor piece).
 
         Returns ``(env_state, next_obs, transitions)`` where ``next_obs``
-        is the post-auto-reset observation the policy acts on next and
-        ``transitions`` is the B-row pytree to store (its ``next_obs``
-        field keeps the pre-reset observation the TD target needs).
+        is the post-auto-reset policy input for the next step (a float
+        observation, or the shifted uint8 frame stack for pixel envs) and
+        ``transitions`` is the B-row pytree to store — float envs keep
+        the pre-reset ``next_obs`` the TD target needs; pixel envs store
+        only the current raw frame (the buffer rebuilds both stacks).
         """
         k_coin, k_rand, k_env = jax.random.split(key, 3)
         eps = jnp.clip(
             cfg.eps_start + (cfg.eps_end - cfg.eps_start)
             * step / cfg.eps_decay_steps, cfg.eps_end, cfg.eps_start)
-        q = q_apply(params, obs)                         # [B, n_actions]
+        q = q_apply(params, q_in(obs))                   # [B, n_actions]
         greedy = jnp.argmax(q, axis=-1)
         explore = jax.random.uniform(k_coin, (cfg.num_envs,)) < eps
         randa = jax.random.randint(k_rand, (cfg.num_envs,), 0, env.n_actions)
         action = jnp.where(explore, randa, greedy).astype(jnp.int32)
-        env_state, next_obs, reward, done = venv.step(env_state, action, k_env)
+        env_state, next_obs, reward, done, terminated = venv.step(
+            env_state, action, k_env)
+        if pixel:
+            transitions = {
+                "frame": obs[..., -1], "action": action, "reward": reward,
+                "done": done.astype(jnp.float32),
+                "terminated": terminated.astype(jnp.float32)}
+            return env_state, stack_push(obs, venv.obs(env_state),
+                                         done), transitions
         transitions = {
             "obs": obs, "action": action, "reward": reward,
-            "next_obs": next_obs, "done": done.astype(jnp.float32)}
+            "next_obs": next_obs, "done": done.astype(jnp.float32),
+            "terminated": terminated.astype(jnp.float32)}
         return env_state, venv.obs(env_state), transitions
 
     def learn(params, target_params, opt_m, opt_v, step, batch, weights):
@@ -385,13 +477,22 @@ def make_dqn(cfg: DQNConfig) -> DQN:
         def one_ep(key):
             k0, key = jax.random.split(key)
             env_state = env.reset(k0)
+            if pixel:
+                obs0 = stack_init(env.obs(env_state))
+            else:
+                obs0 = env.obs(env_state)
 
             def body(carry):
                 env_state, obs, ret, done, key = carry
                 key, k = jax.random.split(key)
-                action = jnp.argmax(q_apply(params, obs)).astype(jnp.int32)
-                env_state, obs2, r, d = env.step(env_state, action, k)
-                return (env_state, env.obs(env_state), ret + r * (1 - done),
+                action = jnp.argmax(
+                    q_apply(params, q_in(obs))).astype(jnp.int32)
+                env_state, obs2, r, d, _term = env.step(env_state, action, k)
+                if pixel:
+                    nxt = stack_push(obs, env.obs(env_state), d)
+                else:
+                    nxt = env.obs(env_state)
+                return (env_state, nxt, ret + r * (1 - done),
                         jnp.maximum(done, d.astype(jnp.float32)), key)
 
             def cond(carry):
@@ -399,8 +500,7 @@ def make_dqn(cfg: DQNConfig) -> DQN:
 
             out = jax.lax.while_loop(
                 cond, body,
-                (env_state, env.obs(env_state), jnp.float32(0),
-                 jnp.float32(0), key))
+                (env_state, obs0, jnp.float32(0), jnp.float32(0), key))
             return out[2]
 
         return jax.vmap(one_ep)(jax.random.split(key, n_episodes)).mean()
@@ -414,4 +514,4 @@ def make_dqn(cfg: DQNConfig) -> DQN:
                evaluate=evaluate, evaluate_many=evaluate_many, act=act,
                learn=learn, cfg=cfg, env=env, venv=venv, replay=rb,
                beta_at=beta_at, q_apply=q_apply,
-               example_transition=example_transition)
+               example_transition=example_transition, init_obs=init_obs)

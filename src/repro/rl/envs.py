@@ -1,12 +1,29 @@
-"""Pure-JAX OpenAI-gym classic-control environments (paper Sec. 4.1.2).
+"""Pure-JAX environments: gym classic-control + MinAtar-style pixel envs.
 
-CartPole-v1 and Acrobot-v1 dynamics transcribed from gym (Euler / RK4
-integration, same constants, same termination), but fully jittable —
-the entire DQN train loop including the environment runs inside one
-lax.scan, which is what makes the reproduction fast enough on 1 CPU.
+CartPole-v1 / Acrobot-v1 / MountainCar-v0 dynamics transcribed from gym
+(Euler / RK4 integration, same constants, same termination), plus two
+MinAtar-style 10x10 pixel games (Breakout, Freeway) with uint8
+single-plane observations — all fully jittable, so the entire DQN train
+loop including the environment runs inside one lax.scan.
 
-Each env exposes: obs_dim, n_actions, reset(key), step(state, action, key)
-with auto-reset on termination (returns the fresh state and marks done).
+Each env exposes::
+
+    obs_shape   tuple — the shape of one observation (``(obs_dim,)`` for
+                the vector envs, ``(H, W)`` for the pixel envs)
+    n_actions   int
+    reset(key) -> state
+    obs(state) -> observation (float32 vector or uint8 frame)
+    step(state, action, key)
+        -> (next_state, obs, reward, done, terminated)
+
+``step`` auto-resets on ``done`` (the returned ``obs`` is the PRE-reset
+observation the TD target consumes; ``next_state`` is already the fresh
+episode).  ``done`` and ``terminated`` are separate signals: ``done``
+ends the episode (termination OR time-limit truncation), while
+``terminated`` is True only when the MDP itself ended (pole fell, goal
+reached, ball lost).  A transition with ``done=True, terminated=False``
+was cut by the time limit and its TD target must still bootstrap — see
+``repro.rl.dqn.td_loss``.
 """
 from __future__ import annotations
 
@@ -47,7 +64,7 @@ def make_env(name: str):
 
 
 class EnvState(NamedTuple):
-    x: jax.Array        # physics state vector
+    x: jax.Array        # physics / game state vector
     t: jax.Array        # steps in current episode
 
 
@@ -56,6 +73,7 @@ class CartPole:
     """CartPole-v1: keep the pole upright; +1 per step; 500-step cap."""
 
     obs_dim = 4
+    obs_shape = (4,)
     n_actions = 2
     max_steps = 500
 
@@ -81,13 +99,14 @@ class CartPole:
         new = jnp.stack([x + self.TAU * x_dot, x_dot + self.TAU * x_acc,
                          th + self.TAU * th_dot, th_dot + self.TAU * th_acc])
         t = state.t + 1
-        done = ((jnp.abs(new[0]) > 2.4) | (jnp.abs(new[2]) > 0.2095)
-                | (t >= self.max_steps))
+        terminated = (jnp.abs(new[0]) > 2.4) | (jnp.abs(new[2]) > 0.2095)
+        done = terminated | (t >= self.max_steps)
         reward = jnp.float32(1.0)
         fresh = self.reset(key)
+        nxt = EnvState(x=new, t=t)
         next_state = jax.tree.map(
-            lambda a, b: jnp.where(done, a, b), fresh, EnvState(x=new, t=t))
-        return next_state, EnvState(x=new, t=t).x, reward, done
+            lambda a, b: jnp.where(done, a, b), fresh, nxt)
+        return next_state, self.obs(nxt), reward, done, terminated
 
 
 @register_env("acrobot")
@@ -95,6 +114,7 @@ class Acrobot:
     """Acrobot-v1: swing the tip above the bar; -1 per step until solved."""
 
     obs_dim = 6
+    obs_shape = (6,)
     n_actions = 3
     max_steps = 500
 
@@ -145,13 +165,13 @@ class Acrobot:
         new = new.at[2].set(jnp.clip(new[2], -4 * jnp.pi, 4 * jnp.pi))
         new = new.at[3].set(jnp.clip(new[3], -9 * jnp.pi, 9 * jnp.pi))
         t = state.t + 1
-        solved = -jnp.cos(new[0]) - jnp.cos(new[1] + new[0]) > 1.0
-        done = solved | (t >= self.max_steps)
-        reward = jnp.where(solved, 0.0, -1.0)
+        terminated = -jnp.cos(new[0]) - jnp.cos(new[1] + new[0]) > 1.0
+        done = terminated | (t >= self.max_steps)
+        reward = jnp.where(terminated, 0.0, -1.0)
         fresh = self.reset(key)
         nxt = EnvState(x=new, t=t)
         next_state = jax.tree.map(lambda a, b: jnp.where(done, a, b), fresh, nxt)
-        return next_state, self.obs(nxt), reward, done
+        return next_state, self.obs(nxt), reward, done, terminated
 
 
 @register_env("mountaincar")
@@ -167,6 +187,7 @@ class MountainCar:
     """
 
     obs_dim = 2
+    obs_shape = (2,)
     n_actions = 3
     max_steps = 200
 
@@ -191,14 +212,166 @@ class MountainCar:
         pos = jnp.clip(pos + vel, self.MIN_POS, self.MAX_POS)
         vel = jnp.where((pos <= self.MIN_POS) & (vel < 0), 0.0, vel)
         t = state.t + 1
-        solved = (pos >= self.GOAL_POS) & (vel >= self.GOAL_VEL)
-        done = solved | (t >= self.max_steps)
+        terminated = (pos >= self.GOAL_POS) & (vel >= self.GOAL_VEL)
+        done = terminated | (t >= self.max_steps)
         reward = jnp.float32(-1.0)
         nxt = EnvState(x=jnp.stack([pos, vel]), t=t)
         fresh = self.reset(key)
         next_state = jax.tree.map(
             lambda a, b: jnp.where(done, a, b), fresh, nxt)
-        return next_state, nxt.x, reward, done
+        return next_state, self.obs(nxt), reward, done, terminated
+
+
+# --- MinAtar-style pixel environments ----------------------------------------
+#
+# 10x10 single-plane uint8 frames in the spirit of MinAtar (Young &
+# Tian, arXiv 1903.03176): the same core game logic at a scale where a
+# jittable transcription stays exact and a conv Q-head trains in
+# seconds.  Object classes are encoded as distinct intensities on one
+# plane (rather than MinAtar's one-hot channel stack) so a single
+# ``uint8[capacity, 10, 10]`` ring slot stores a whole observation —
+# the workload the frame-deduplicated replay storage is built for.
+
+BRICK, CAR = 90, 128          # background object intensities
+PADDLE, CHICKEN = 180, 255    # player intensities (drawn over background)
+BALL = 255
+
+
+@register_env("breakout")
+class Breakout:
+    """MinAtar-style Breakout: 10x10 grid, 3 brick rows, diagonal ball.
+
+    State vector ``x`` (float32[35]): ``[ball_y, ball_x, dy, dx,
+    paddle_x, bricks(3x10 flattened)]``.  Actions: 0 = noop, 1 = paddle
+    left, 2 = paddle right.  The ball moves one diagonal cell per step,
+    reflecting off the side walls and ceiling; hitting a brick clears it
+    (+1 reward) and bounces the ball back without entering the cell;
+    reaching the bottom row bounces off the paddle if aligned, else the
+    ball is lost (**terminated**).  Clearing the whole wall respawns it.
+    Episodes are also truncated (``done`` without ``terminated``) at
+    ``max_steps``.
+    """
+
+    obs_shape = (10, 10)
+    n_actions = 3
+    max_steps = 300
+
+    def reset(self, key: jax.Array) -> EnvState:
+        k_x, k_d = jax.random.split(key)
+        ball_x = jnp.float32(jax.random.randint(k_x, (), 0, 10))
+        dx = jnp.where(jax.random.bernoulli(k_d), 1.0, -1.0)
+        head = jnp.stack([jnp.float32(4.0), ball_x, jnp.float32(1.0), dx,
+                          jnp.float32(4.0)])
+        return EnvState(x=jnp.concatenate([head, jnp.ones(30)]),
+                        t=jnp.int32(0))
+
+    def obs(self, state: EnvState) -> jax.Array:
+        by, bx, _, _, px = state.x[:5]
+        bricks = state.x[5:].reshape(3, 10) > 0.5
+        g = jnp.zeros((10, 10), jnp.uint8)
+        g = g.at[1:4].set(jnp.where(bricks, BRICK, 0).astype(jnp.uint8))
+        g = g.at[9, px.astype(jnp.int32)].set(PADDLE)
+        g = g.at[by.astype(jnp.int32), bx.astype(jnp.int32)].set(BALL)
+        return g
+
+    def step(self, state: EnvState, action: jax.Array, key: jax.Array):
+        by, bx, dy, dx, px = state.x[:5]
+        bricks = state.x[5:]
+        px = jnp.clip(px + jnp.float32(action == 2) - jnp.float32(action == 1),
+                      0.0, 9.0)
+        ny, nx = by + dy, bx + dx
+        # side walls / ceiling: reflect position and flip direction
+        dx = jnp.where((nx < 0) | (nx > 9), -dx, dx)
+        nx = jnp.where(nx < 0, -nx, jnp.where(nx > 9, 18.0 - nx, nx))
+        dy = jnp.where(ny < 0, -dy, dy)
+        ny = jnp.where(ny < 0, -ny, ny)
+        # brick hit: clear it, +1, bounce back without entering the cell
+        in_wall = (ny >= 1) & (ny <= 3)
+        bidx = jnp.clip((ny - 1) * 10 + nx, 0, 29).astype(jnp.int32)
+        hit = in_wall & (bricks[bidx] > 0.5)
+        reward = hit.astype(jnp.float32)
+        bricks = bricks.at[bidx].set(jnp.where(hit, 0.0, bricks[bidx]))
+        dy = jnp.where(hit, -dy, dy)
+        ny = jnp.where(hit, by, ny)
+        nx = jnp.where(hit, bx, nx)
+        # bottom row: paddle bounce or ball lost
+        at_bottom = ny >= 9
+        caught = at_bottom & (nx == px)
+        dy = jnp.where(caught, -1.0, dy)
+        terminated = at_bottom & ~caught
+        # cleared wall respawns
+        bricks = jnp.where(bricks.sum() < 0.5, jnp.ones(30), bricks)
+        t = state.t + 1
+        done = terminated | (t >= self.max_steps)
+        nxt = EnvState(x=jnp.concatenate(
+            [jnp.stack([ny, nx, dy, dx, px]), bricks]), t=t)
+        fresh = self.reset(key)
+        next_state = jax.tree.map(
+            lambda a, b: jnp.where(done, a, b), fresh, nxt)
+        return next_state, self.obs(nxt), reward, done, terminated
+
+
+@register_env("freeway")
+class Freeway:
+    """MinAtar-style Freeway: cross 8 lanes of traffic, +1 per crossing.
+
+    State vector ``x`` (float32[9]): ``[chicken_y, car_x(8 lanes)]``.
+    The chicken lives in column 4 and moves with 0 = noop, 1 = up,
+    2 = down.  Lane ``l`` (grid row ``l+1``) carries one car advancing
+    one cell every ``PERIOD[l]`` steps in direction ``DIRECTION[l]``
+    (wrapping).  A collision sends the chicken back to the bottom row.
+    Reaching the top row scores +1 and also restarts the crossing.
+    Freeway never terminates — episodes end only by time-limit
+    truncation, which makes it the pure ``done-without-terminated``
+    member of the env grid.
+    """
+
+    obs_shape = (10, 10)
+    n_actions = 3
+    max_steps = 250
+
+    PERIOD = (1, 2, 3, 4, 4, 3, 2, 1)
+    DIRECTION = (1, -1, 1, -1, 1, -1, 1, -1)
+    COL = 4  # the chicken's fixed column
+
+    def reset(self, key: jax.Array) -> EnvState:
+        cars = jnp.float32(jax.random.randint(key, (8,), 0, 10))
+        return EnvState(x=jnp.concatenate([jnp.full((1,), 9.0), cars]),
+                        t=jnp.int32(0))
+
+    def obs(self, state: EnvState) -> jax.Array:
+        y = state.x[0].astype(jnp.int32)
+        cars = state.x[1:].astype(jnp.int32)
+        g = jnp.zeros((10, 10), jnp.uint8)
+        g = g.at[jnp.arange(1, 9), cars].set(CAR)
+        g = g.at[y, self.COL].set(CHICKEN)
+        return g
+
+    def step(self, state: EnvState, action: jax.Array, key: jax.Array):
+        y = state.x[0]
+        cars = state.x[1:]
+        t = state.t + 1
+        y = jnp.clip(y - jnp.float32(action == 1) + jnp.float32(action == 2),
+                     0.0, 9.0)
+        period = jnp.asarray(self.PERIOD, jnp.int32)
+        direction = jnp.asarray(self.DIRECTION, jnp.float32)
+        moves = (t % period == 0).astype(jnp.float32)
+        cars = (cars + moves * direction) % 10.0
+        # collision: the chicken's row holds a car in its column
+        lane = y.astype(jnp.int32) - 1          # grid row l+1 -> lane l
+        in_traffic = (y >= 1) & (y <= 8)
+        hit = in_traffic & (cars[jnp.clip(lane, 0, 7)] == jnp.float32(self.COL))
+        y = jnp.where(hit, 9.0, y)
+        scored = y <= 0
+        reward = scored.astype(jnp.float32)
+        y = jnp.where(scored, 9.0, y)
+        terminated = jnp.bool_(False)           # Freeway never terminates
+        done = t >= self.max_steps
+        nxt = EnvState(x=jnp.concatenate([y[None], cars]), t=t)
+        fresh = self.reset(key)
+        next_state = jax.tree.map(
+            lambda a, b: jnp.where(done, a, b), fresh, nxt)
+        return next_state, self.obs(nxt), reward, done, terminated
 
 
 class VectorEnv:
@@ -219,7 +392,11 @@ class VectorEnv:
             raise ValueError(f"num_envs must be >= 1, got {num_envs}")
         self.env = env
         self.num_envs = num_envs
-        self.obs_dim = env.obs_dim
+        # Vector envs expose (obs_dim,); pixel envs (H, W).  ``obs_dim``
+        # is kept for pre-obs_shape call sites (None for pixel envs).
+        self.obs_shape = (tuple(env.obs_shape) if hasattr(env, "obs_shape")
+                          else (env.obs_dim,))
+        self.obs_dim = getattr(env, "obs_dim", None)
         self.n_actions = env.n_actions
 
     def reset(self, key: jax.Array):
@@ -229,7 +406,8 @@ class VectorEnv:
         return jax.vmap(self.env.obs)(state)
 
     def step(self, state, actions: jax.Array, key: jax.Array):
-        """-> (state, next_obs [B, obs_dim], reward [B], done [B])."""
+        """-> (state, next_obs [B, *obs_shape], reward [B], done [B],
+        terminated [B])."""
         keys = jax.random.split(key, self.num_envs)
         return jax.vmap(self.env.step)(state, actions, keys)
 

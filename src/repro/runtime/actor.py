@@ -213,7 +213,7 @@ class Actor(threading.Thread):
         k_reset, k_roll = prng.actor_keys(self._base_key, self.actor_id)
         if self._resume_state is None:
             env_state = dqn.venv.reset(k_reset)
-            obs = dqn.venv.obs(env_state)
+            obs = dqn.init_obs(env_state)  # raw obs, or seeded frame stack
             ep_ret = jnp.zeros(dqn.cfg.num_envs)
             # This actor's own n-step window (None for n_step == 1): an
             # independent env stream must not share the buffer's.

@@ -47,7 +47,8 @@ class Feedback(NamedTuple):
     seq0: int           # global batch sequence number of row 0 (FIFO)
     idx: jax.Array      # int32[S, batch] sampled replay rows
     td: jax.Array       # float32[S, batch] fresh TD errors
-    stamp: jax.Array    # int32[S, batch] write stamps at sample time
+    stamp: jax.Array    # int32[S, batch, 2] (counter, gen) write stamps
+    #                     captured at sample time
     version: int        # learner steps completed when the slab was drawn
 
 

@@ -39,7 +39,8 @@ class BatchSlab(NamedTuple):
     idx: jax.Array      # int32[S, batch] sampled replay rows
     batch: Any          # pytree, leaves [S, batch, ...]
     weights: jax.Array  # float32[S, batch] importance weights
-    stamp: jax.Array    # int32[S, batch] write stamps at sample time
+    stamp: jax.Array    # int32[S, batch, 2] (counter, gen) write stamps
+    #                     captured at sample time
     version: int        # learner steps completed when this slab was drawn
 
 

@@ -239,6 +239,16 @@ class ReplayService:
         self.telemetry = telemetry
         self.dqn = make_dqn(cfg)
         rb = self.dqn.replay
+        # Frame-deduplicated storage chains stacks through ring adjacency
+        # (slot i-stride must be the previous timestep of the same env
+        # stream).  Interleaved blocks from multiple actors would break
+        # that invariant on every chunk boundary, so pixel runs are
+        # single-actor (the actor is still cfg.num_envs-wide).
+        if rb.frame_store is not None and num_actors != 1:
+            raise ValueError(
+                "frame-store replay requires num_actors=1: stack "
+                "materialization relies on single-stream ring adjacency "
+                f"(got num_actors={num_actors})")
         # One jitted callable per pipeline stage, built once so repeated
         # run() calls (warmup, then measurement) reuse the compile cache.
         self._rollout = jax.jit(make_rollout(self.dqn, chunk_len))
@@ -269,10 +279,11 @@ class ReplayService:
             # Flatten [S, batch] row-major: masked_update resolves rows
             # duplicated across batches to their last occurrence, so one
             # scatter reproduces sequential-apply semantics (stamps can't
-            # change between rows of a slab).
+            # change between rows of a slab).  Stamps are (counter, gen)
+            # pairs — keep their trailing word axis through the flatten.
             flat = lambda x: x.reshape(-1)
             return rb.update_priorities(
-                state, flat(idx), flat(td), stamp=flat(stamp))
+                state, flat(idx), flat(td), stamp=stamp.reshape(-1, 2))
 
         # The feedback slab (idx/td/stamp) is consumed exactly once by
         # this apply — donate those buffers; the state stays undonated
@@ -565,8 +576,7 @@ class ReplayService:
             # The restored buffer IS the manager's latest on-disk state:
             # the first snapshot of this run can be a delta against it.
             # fb_applied is 0 in THIS run's counter space (fresh log).
-            resume_marks = {"pos": int(self._bstate.pos),
-                            "total_adds": int(self._bstate.total_adds),
+            resume_marks = {**rck.replay_marks(self._bstate),
                             "fb_applied": 0}
         else:
             state0 = self.dqn.init(key)
@@ -995,8 +1005,7 @@ class _CowSnapshotter:
                             if seq >= a_base for r in arr]
                     dirty = self._svc._async_dirty(bstate, snap,
                                                    self.marks, rows)
-                next_marks = {"pos": int(bstate.pos),
-                              "total_adds": int(bstate.total_adds),
+                next_marks = {**rck.replay_marks(bstate),
                               "fb_applied": a_now}
                 self._manager.save(steps, snap, meta=meta, dirty=dirty)
                 self.marks = next_marks

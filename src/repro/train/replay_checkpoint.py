@@ -52,12 +52,18 @@ from repro.core.replay_buffer import ReplayState, dirty_arcs, rows_to_ranges
 from repro.train import checkpoint as ck
 
 
+_U32 = 1 << 32
+
+
 def replay_marks(state: Any) -> dict:
     """Host watermarks of ``state`` identifying what a later delta save
-    must cover: the ring write position and the global add counter.
-    Capture at (or right after) each save; feed back to
-    :func:`replay_dirty` at the next one."""
-    return {"pos": int(state.pos), "total_adds": int(state.total_adds)}
+    must cover: the ring write position, the global add counter (masked
+    to its unsigned 32-bit value — the device word is a wrapping int32)
+    and its rollover generation.  Capture at (or right after) each save;
+    feed back to :func:`replay_dirty` at the next one."""
+    return {"pos": int(state.pos),
+            "total_adds": int(state.total_adds) & (_U32 - 1),
+            "add_gen": int(state.add_gen)}
 
 
 def replay_dirty(rb, state: Any, marks: dict,
@@ -80,7 +86,16 @@ def replay_dirty(rb, state: Any, marks: dict,
     ``dirty=``.
     """
     capacity = rb.capacity
-    n_new = int(state.total_adds) - int(marks["total_adds"])
+    # The add counter is a wrapping int32: difference the unsigned views
+    # mod 2^32 so a delta spanning the signed rollover stays exact.  An
+    # identical counter with a bumped generation means a full 2^32-add
+    # lap between snapshots — everything is dirty.
+    now = int(state.total_adds) & (_U32 - 1)
+    base = int(marks["total_adds"]) & (_U32 - 1)
+    n_new = (now - base) % _U32
+    gen_delta = (int(state.add_gen) - int(marks.get("add_gen", 0))) % _U32
+    if n_new == 0 and gen_delta:
+        n_new = capacity
     arcs = dirty_arcs(capacity, marks["pos"], n_new)
     arc_spec: Any = ck.Rows(arcs) if arcs else False
     prio_ranges = arcs + rows_to_ranges(priority_rows or [])
@@ -99,6 +114,8 @@ def replay_dirty(rb, state: Any, marks: dict,
         max_priority=True,
         write_stamp=arc_spec,
         total_adds=True,
+        write_gen=arc_spec,
+        add_gen=True,
         nstep=(None if state.nstep is None
                else ck.dirty_like(state.nstep, True)),
     )

@@ -14,8 +14,8 @@ def test_cartpole_dynamics():
     env = CartPole()
     s = env.reset(jax.random.key(0))
     assert s.x.shape == (4,)
-    s2, obs, r, done = env.step(s, jnp.int32(1), jax.random.key(1))
-    assert float(r) == 1.0 and not bool(done)
+    s2, obs, r, done, term = env.step(s, jnp.int32(1), jax.random.key(1))
+    assert float(r) == 1.0 and not bool(done) and not bool(term)
     # pushing right increases cart velocity
     assert float(s2.x[1]) > float(s.x[1])
 
@@ -24,15 +24,15 @@ def test_cartpole_terminates_on_angle():
     env = CartPole()
     s = env.reset(jax.random.key(0))
     s = s._replace(x=jnp.array([0.0, 0.0, 0.25, 0.0]))  # beyond 12 deg
-    _, _, _, done = env.step(s, jnp.int32(0), jax.random.key(1))
-    assert bool(done)
+    _, _, _, done, term = env.step(s, jnp.int32(0), jax.random.key(1))
+    assert bool(done) and bool(term)
 
 
 def test_acrobot_reward_structure():
     env = Acrobot()
     s = env.reset(jax.random.key(0))
-    _, _, r, done = env.step(s, jnp.int32(0), jax.random.key(1))
-    assert float(r) == -1.0 and not bool(done)
+    _, _, r, done, term = env.step(s, jnp.int32(0), jax.random.key(1))
+    assert float(r) == -1.0 and not bool(done) and not bool(term)
 
 
 # --- agent family ------------------------------------------------------------
@@ -47,6 +47,27 @@ def test_qhead_shapes_and_batch_broadcast():
         assert q1.shape == (3,) and qb.shape == (5, 3)
         np.testing.assert_allclose(np.asarray(qb[0]), np.asarray(q1),
                                    rtol=1e-6)
+
+
+def test_conv_qhead_shapes_and_batch_broadcast():
+    for kind in ("conv", "conv-dueling"):
+        head = make_qhead(kind, (10, 10, 4), hidden=16, n_actions=3)
+        params = head.init(jax.random.key(0))
+        obs = jax.random.uniform(jax.random.key(1), (10, 10, 4))
+        q1 = head.apply(params, obs)                   # single obs
+        qb = head.apply(params, jnp.broadcast_to(obs, (5, 10, 10, 4)))
+        assert q1.shape == (3,) and qb.shape == (5, 3)
+        np.testing.assert_allclose(np.asarray(qb[0]), np.asarray(q1),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_qhead_shape_validation():
+    with pytest.raises(ValueError, match="conv head"):
+        make_qhead("mlp", (10, 10, 4), hidden=8, n_actions=2)
+    with pytest.raises(ValueError, match=r"\(H, W, C\)"):
+        make_qhead("conv", (4,), hidden=8, n_actions=2)
+    with pytest.raises(ValueError, match="unknown Q-head kind"):
+        make_qhead("transformer", (4,), hidden=8, n_actions=2)
 
 
 def test_dueling_head_is_identifiable():
@@ -73,6 +94,41 @@ def test_unknown_agent_and_bad_n_step_raise():
     assert set(AGENTS) == {"dqn", "double", "dueling", "double-dueling"}
 
 
+def _batch(done, terminated):
+    return {
+        "obs": jax.random.normal(jax.random.key(1), (4, 4)),
+        "action": jnp.zeros(4, jnp.int32),
+        "reward": jnp.ones(4),
+        "next_obs": jax.random.normal(jax.random.key(2), (4, 4)) * 3.0,
+        "done": done, "terminated": terminated}
+
+
+def test_truncation_bootstraps_termination_does_not():
+    """Regression pin for the `(1 - done)` target mask: a transition cut
+    by the time limit (`done=1, terminated=0`) must still bootstrap its
+    TD target; a real terminal (`terminated=1`) must not.  Under the old
+    mask both batches produced identical TDs."""
+    dqn = make_dqn(DQNConfig(agent="dqn", num_envs=1, replay_size=64,
+                             batch=4))
+    params = dqn.init(jax.random.key(0)).params
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    w = jnp.ones(4)
+    step = jnp.int32(0)
+    trunc = _batch(done=jnp.ones(4), terminated=jnp.zeros(4))
+    term = _batch(done=jnp.ones(4), terminated=jnp.ones(4))
+    _, _, _, td_trunc, _ = dqn.learn(params, params, zeros, zeros, step,
+                                     trunc, w)
+    _, _, _, td_term, _ = dqn.learn(params, params, zeros, zeros, step,
+                                    term, w)
+    boot = np.asarray(
+        dqn.q_apply(params, trunc["next_obs"]).max(-1))
+    # td = qa - target; removing the bootstrap raises td by gamma * maxQ
+    diff = np.asarray(td_term) - np.asarray(td_trunc)
+    np.testing.assert_allclose(diff, dqn.cfg.gamma * boot,
+                               rtol=1e-5, atol=1e-6)
+    assert np.abs(diff).max() > 1e-4  # the fixture actually exercises it
+
+
 def test_double_targets_decouple_argmax_from_evaluation():
     """With target == online params the Double-DQN target equals the
     vanilla max target (same td); with decoupled target params whose
@@ -81,12 +137,7 @@ def test_double_targets_decouple_argmax_from_evaluation():
     cfg_d = DQNConfig(agent="double", num_envs=1, replay_size=64, batch=4)
     dqn_v, dqn_d = make_dqn(cfg_v), make_dqn(cfg_d)
     params = dqn_v.init(jax.random.key(0)).params
-    batch = {
-        "obs": jax.random.normal(jax.random.key(1), (4, 4)),
-        "action": jnp.zeros(4, jnp.int32),
-        "reward": jnp.ones(4),
-        "next_obs": jax.random.normal(jax.random.key(2), (4, 4)) * 3.0,
-        "done": jnp.zeros(4)}
+    batch = _batch(done=jnp.zeros(4), terminated=jnp.zeros(4))
     w = jnp.ones(4)
     zeros = jax.tree.map(jnp.zeros_like, params)
     step = jnp.int32(0)
@@ -126,6 +177,25 @@ def test_agent_family_trains_smoke(agent):
                     eps_decay_steps=100, target_sync=10, v_max=8.0)
     dqn = make_dqn(cfg)
     state, metrics = dqn.train(jax.random.key(0), 60)
+    assert np.isfinite(np.asarray(metrics["return_mean"])).all()
+    for leaf in jax.tree.leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf)))
+    assert np.isfinite(float(dqn.evaluate(state, jax.random.key(1), 2)))
+
+
+@pytest.mark.parametrize("env", ["breakout", "freeway"])
+def test_pixel_agent_trains_smoke(env):
+    """Pixel envs route through the frame store + conv head end-to-end:
+    uint8 stacked policy input, frame-deduplicated replay, sample-time
+    materialization — finite params and eval after a short run."""
+    cfg = DQNConfig(env=env, agent="dqn", sampler="amper-fr", num_envs=2,
+                    replay_size=256, batch=16, hidden=32, history_len=4,
+                    learn_start=30, eps_decay_steps=100, target_sync=10,
+                    v_max=8.0)
+    dqn = make_dqn(cfg)
+    assert dqn.replay.frame_store is not None
+    state, metrics = dqn.train(jax.random.key(0), 80)
+    assert state.obs.dtype == jnp.uint8        # actor carries raw stacks
     assert np.isfinite(np.asarray(metrics["return_mean"])).all()
     for leaf in jax.tree.leaves(state.params):
         assert bool(jnp.all(jnp.isfinite(leaf)))

@@ -83,7 +83,7 @@ def test_replay_dirty_delta_roundtrips_bitwise(kind, tmp_path):
                            "reward": jnp.arange(12, dtype=jnp.float32)})
     rck.save_replay(str(tmp_path), 1, st)  # legacy full base
     marks = rck.replay_marks(st)
-    assert marks == {"pos": 12, "total_adds": 12}
+    assert marks == {"pos": 12, "total_adds": 12, "add_gen": 0}
     # write 9 more rows: the arc wraps (12..16 then 0..5), and touch
     # priorities on rows the arc does NOT cover
     st = rb.add_batch(st, {"obs": jax.random.normal(jax.random.fold_in(k, 1),
@@ -108,6 +108,41 @@ def test_replay_dirty_full_wrap_is_whole_ring():
         st = rb.add_batch(st, {"obs": jnp.zeros((5, 4)),
                                "reward": jnp.zeros(5)})
     marks = {"pos": 4, "total_adds": 4}  # 16 adds since marks > capacity
+    dirty = rck.replay_dirty(rb, st, marks)
+    spec = jax.tree.leaves(
+        dirty.storage, is_leaf=lambda x: isinstance(x, ck.Rows))[0]
+    assert spec.ranges == [(0, cap)]
+
+
+def test_replay_dirty_wrap_safe_across_int32_rollover():
+    """Marks captured just below the signed-int32 add-counter boundary
+    plus a state whose counter crossed it must still yield the exact
+    9-row wrapped arc — the plain signed difference would be negative
+    (an empty dirty set) and the delta save would silently drop rows."""
+    cap = 16
+    rb = ReplayBuffer(cap, make_sampler("per-cumsum", cap))
+    st = rb.init(EX)
+    marks = {"pos": 12, "total_adds": (2**31 - 3) & 0xFFFFFFFF,
+             "add_gen": 0}
+    st = st._replace(pos=jnp.int32(5), size=jnp.int32(cap),
+                     total_adds=jnp.int32(-(2**31) + 6),  # 2^31 + 6 unsigned
+                     add_gen=jnp.int32(1))
+    dirty = rck.replay_dirty(rb, st, marks)
+    spec = jax.tree.leaves(
+        dirty.storage, is_leaf=lambda x: isinstance(x, ck.Rows))[0]
+    assert spec.ranges == [(12, cap), (0, 5)]
+
+
+def test_replay_dirty_full_lap_detected_by_generation():
+    """An identical (masked) add counter with a bumped generation means
+    a full 2^32-add lap ran between snapshots: everything is dirty, not
+    nothing."""
+    cap = 16
+    rb = ReplayBuffer(cap, make_sampler("per-cumsum", cap))
+    st = rb.init(EX)
+    marks = {"pos": 3, "total_adds": 77, "add_gen": 0}
+    st = st._replace(pos=jnp.int32(3), size=jnp.int32(cap),
+                     total_adds=jnp.int32(77), add_gen=jnp.int32(1))
     dirty = rck.replay_dirty(rb, st, marks)
     spec = jax.tree.leaves(
         dirty.storage, is_leaf=lambda x: isinstance(x, ck.Rows))[0]

@@ -99,8 +99,8 @@ def test_stamped_update_drops_recycled_slots():
     state = rb.init({"x": jnp.float32(0)})
     state = rb.add_batch(state, {"x": jnp.zeros(6)})
     idx = jnp.array([0, 5])
-    stamp = rb.stamps(state, idx)                       # sample-time stamps
-    np.testing.assert_array_equal(np.asarray(stamp), [0, 5])
+    stamp = rb.stamps(state, idx)     # sample-time (counter, gen) pairs
+    np.testing.assert_array_equal(np.asarray(stamp), [[0, 0], [5, 0]])
     state = rb.add_batch(state, {"x": jnp.zeros(4)})    # recycles slot 0
     state = rb.update_priorities(
         state, idx, jnp.array([5.0, 9.0]), stamp=stamp)
@@ -113,6 +113,49 @@ def test_stamped_update_drops_recycled_slots():
     # max_priority tracks only the valid rows
     np.testing.assert_allclose(
         float(state.max_priority), max(1.0, alpha_p(9.0)), rtol=1e-5)
+
+
+def test_add_counter_rollover_bumps_generation():
+    """Drive real add_batch calls across the signed-int32 boundary: the
+    generation word increments exactly at the rollover, per-row stamps
+    keep their wrapping values, and the (counter, gen) pair stays
+    monotone in lexicographic order."""
+    rb = ReplayBuffer(8, make_sampler("uniform", 8))
+    state = rb.init({"x": jnp.float32(0)})
+    state = state._replace(total_adds=jnp.int32(2**31 - 3))
+    state = rb.add_batch(state, {"x": jnp.zeros(6)})    # 3 pre, 3 post wrap
+    assert int(state.add_gen) == 1
+    np.testing.assert_array_equal(
+        np.asarray(state.write_stamp[:6]),
+        np.array([2**31 - 3, 2**31 - 2, 2**31 - 1,
+                  -(2**31), -(2**31) + 1, -(2**31) + 2], np.int64))
+    np.testing.assert_array_equal(np.asarray(state.write_gen[:6]),
+                                  [0, 0, 0, 1, 1, 1])
+    assert int(state.total_adds) == -(2**31) + 3        # wrapped counter
+
+
+def test_stamp_equality_is_wrap_safe_across_generations():
+    """A slot recycled an exact multiple of 2^32 adds after the sample
+    repeats its int32 counter word; only the generation word tells the
+    writes apart.  The single-word comparison this replaces would
+    false-accept the stale feedback and clobber the newcomer."""
+    rb = ReplayBuffer(8, make_sampler("per-cumsum", 8))
+    state = rb.init({"x": jnp.float32(0)})
+    state = rb.add_batch(state, {"x": jnp.zeros(6)})
+    idx = jnp.array([0, 5])
+    stale = rb.stamps(state, idx)                       # gen-0 stamps
+    # Forge the 2^32-adds-later recycling: same counter words, bumped
+    # generation on slot 0 (as a full lap of _write_arc would produce).
+    state = state._replace(
+        write_gen=state.write_gen.at[0].set(1), add_gen=jnp.int32(1))
+    state = rb.update_priorities(
+        state, idx, jnp.array([5.0, 9.0]), stamp=stale)
+    prios = np.asarray(rb.sampler.priorities(state.sampler_state))
+    alpha_p = lambda td: (abs(td) + rb.eps) ** rb.alpha
+    # slot 5 kept its generation -> the update lands
+    np.testing.assert_allclose(prios[5], alpha_p(9.0), rtol=1e-5)
+    # slot 0's counter matches but its generation moved on -> dropped
+    np.testing.assert_allclose(prios[0], 1.0, rtol=1e-5)
 
 
 def test_masked_update_is_noop_where_invalid():

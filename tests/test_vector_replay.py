@@ -117,11 +117,12 @@ def test_vector_env_num_envs_1_matches_scalar():
     for t in range(50):
         k = jax.random.fold_in(k_step, t)
         a = jnp.int32(t % 2)
-        vs, vobs, vr, vd = venv.step(vs, a[None], k)
-        ss, sobs, sr, sd = env.step(ss, a, jax.random.split(k, 1)[0])
+        vs, vobs, vr, vd, vterm = venv.step(vs, a[None], k)
+        ss, sobs, sr, sd, sterm = env.step(ss, a, jax.random.split(k, 1)[0])
         np.testing.assert_allclose(np.asarray(vobs[0]), np.asarray(sobs),
                                    rtol=1e-6)
         assert bool(vd[0]) == bool(sd)
+        assert bool(vterm[0]) == bool(sterm)
         np.testing.assert_allclose(np.asarray(venv.obs(vs)[0]),
                                    np.asarray(env.obs(ss)), rtol=1e-6)
 
@@ -133,7 +134,7 @@ def test_vector_env_independent_episodes():
     assert obs.shape == (8, 4)
     # distinct reset keys -> distinct initial states
     assert len(np.unique(np.asarray(obs[:, 0]))) > 1
-    state, next_obs, r, d = venv.step(
+    state, next_obs, r, d, term = venv.step(
         state, jnp.zeros(8, jnp.int32), jax.random.key(2))
     assert next_obs.shape == (8, 4) and r.shape == (8,) and d.shape == (8,)
 
